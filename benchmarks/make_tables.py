@@ -1,0 +1,93 @@
+"""Regenerate the EXPERIMENTS.md tables from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.make_tables [--tag roofline]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCHS = ["mamba2-780m", "seamless-m4t-medium", "recurrentgemma-9b",
+         "deepseek-moe-16b", "stablelm-1.6b", "tinyllama-1.1b", "yi-34b",
+         "qwen2-72b", "chameleon-34b", "deepseek-v2-lite-16b"]
+
+
+def load(tag: str, mesh: str):
+    recs = {}
+    for f in glob.glob(os.path.join(ART, "*.json")):
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("tag", "") == tag and r["mesh"] == mesh:
+            recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def fmt(x, digits=2):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}e}"
+
+
+def roofline_md(tag="roofline", mesh="pod16x16"):
+    recs = load(tag, mesh)
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful (6ND/HLO) | bytes/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s))
+            if r is None:
+                lines.append(f"| {a} | {s} | - | - | - | (no artifact) | - | - |")
+                continue
+            if r["status"] != "ok":
+                note = "SKIP" if r["status"].startswith("skip") else "FAIL"
+                lines.append(f"| {a} | {s} | - | - | - | {note} | - | - |")
+                continue
+            lines.append(
+                f"| {a} | {s} | {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+                f"| {fmt(r['collective_s'])} | **{r['dominant']}** "
+                f"| {r['useful_flops_ratio']:.2f} "
+                f"| {r['bytes_per_device']/1e9:.2f} GB |")
+    return "\n".join(lines)
+
+
+def dryrun_md(mesh):
+    recs = load("", mesh)
+    lines = [
+        "| arch | shape | status | dominant | coll bytes/chip | compile s |",
+        "|---|---|---|---|---|---|",
+    ]
+    for a in ARCHS:
+        for s in SHAPES:
+            r = recs.get((a, s))
+            if r is None:
+                lines.append(f"| {a} | {s} | missing | | | |")
+            elif r["status"] != "ok":
+                lines.append(f"| {a} | {s} | skip | | | |")
+            else:
+                lines.append(
+                    f"| {a} | {s} | ok | {r['dominant']} "
+                    f"| {fmt(r['collective_bytes'])} | {r['compile_s']} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--which", default="all")
+    args = ap.parse_args()
+    print("## Roofline (single-pod 16x16, extrapolated-depth artifacts)\n")
+    print(roofline_md())
+    print("\n## Dry-run pod16x16 (scan-mode compile proof)\n")
+    print(dryrun_md("pod16x16"))
+    print("\n## Dry-run pod2x16x16 (multi-pod compile proof)\n")
+    print(dryrun_md("pod2x16x16"))
+
+
+if __name__ == "__main__":
+    main()

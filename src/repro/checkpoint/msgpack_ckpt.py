@@ -1,0 +1,78 @@
+"""Msgpack pytree checkpointing (no orbax in this environment).
+
+Layout: ``<dir>/step_<n>.msgpack`` with an atomic rename after write.
+Arrays are stored as (dtype, shape, raw bytes); bfloat16 round-trips via a
+uint16 view.  Restore is sharding-aware: pass ``shardings`` (a pytree of
+NamedSharding) and each leaf is device_put directly to its destination.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_BF16 = "bfloat16"
+
+
+def _encode_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    if str(arr.dtype) == _BF16:
+        return {"dtype": _BF16, "shape": list(arr.shape),
+                "data": arr.view(np.uint16).tobytes()}
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _decode_leaf(d: dict):
+    shape = tuple(d["shape"])
+    if d["dtype"] == _BF16:
+        raw = np.frombuffer(d["data"], np.uint16).reshape(shape)
+        return jnp.asarray(raw.view(jnp.bfloat16))
+    return np.frombuffer(d["data"], np.dtype(d["dtype"])).reshape(shape)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"treedef": str(treedef),
+               "leaves": [_encode_leaf(l) for l in leaves]}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.msgpack$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, target, shardings=None):
+    """``target`` supplies the treedef (and dtype/shape check)."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(target)
+    stored = [_decode_leaf(d) for d in payload["leaves"]]
+    if len(stored) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, target has {len(leaves)}")
+    out = []
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves))
+    for tgt, arr, sh in zip(leaves, stored, shard_leaves):
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch {arr.shape} vs {tgt.shape}")
+        arr = jnp.asarray(arr, dtype=tgt.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree.unflatten(treedef, out)

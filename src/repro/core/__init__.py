@@ -1,0 +1,6 @@
+"""The paper's contribution: Distributed-GAN (three federated adversarial
+training approaches) as a first-class distribution strategy."""
+
+from repro.core import gan, losses, federated, approaches, protocol  # noqa: F401
+
+__all__ = ["gan", "losses", "federated", "approaches", "protocol"]

@@ -1,0 +1,278 @@
+"""The paper's three Distributed-GAN training approaches as jit-able step
+functions, plus the single-node "normal GAN" baseline they are compared
+against (paper §5.5).
+
+All step functions share the state layout:
+
+    DistGANState(g, g_opt, ds, d_opts, server_d, step, key)
+
+``ds`` holds the U local discriminators stacked on a leading user axis;
+user u's real data enters only through ``real (U, B, ...)`` slice u —
+the privacy boundary is structural (no cross-user term ever touches raw
+slices; only deltas/logits are combined).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import losses
+from repro.core.federated import COMBINERS, select_delta
+from repro.optim import adamw, apply_updates
+
+
+class DistGANState(NamedTuple):
+    g: Any
+    g_opt: Any
+    ds: Any          # stacked (U, ...) local discriminators
+    d_opts: Any      # stacked optimizer states
+    server_d: Any    # approach 1 only (else None)
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DistGANConfig:
+    num_users: int = 2
+    g_lr: float = 2e-4
+    d_lr: float = 2e-4
+    b1: float = 0.5          # paper-era DCGAN Adam betas
+    b2: float = 0.999
+    selection: str = "topk"  # approach 1 upload policy
+    upload_frac: float = 0.1
+    combiner: str = "max_abs"
+    server_scale: float = 1.0  # fold factor for combined deltas
+    use_topk_kernel: bool = False
+    loss_type: str = "bce"     # bce (paper) | wgan (beyond-paper, ref [1])
+    wgan_clip: float = 0.05    # weight-clip for the W-GAN critic
+
+
+def _opts(fcfg: DistGANConfig):
+    g_opt = adamw(fcfg.g_lr, b1=fcfg.b1, b2=fcfg.b2)
+    d_opt = adamw(fcfg.d_lr, b1=fcfg.b1, b2=fcfg.b2)
+    return g_opt, d_opt
+
+
+def init_state(pair, fcfg: DistGANConfig, key, *,
+               sync_ds: bool = False) -> DistGANState:
+    """``sync_ds=True`` (approach 1): all users agree on one network —
+    local Ds start at the server weights (paper §3.1 step 1)."""
+    kg, kd, ks, kk = jax.random.split(key, 4)
+    g_opt_def, d_opt_def = _opts(fcfg)
+    g, d0 = pair.init(kg)
+    if sync_ds:
+        ds = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (fcfg.num_users,) + s.shape),
+            d0)
+    else:
+        ds = pair.init_user_ds(kd, fcfg.num_users)
+    d_opts = jax.vmap(d_opt_def.init)(ds)
+    server_d = d0  # approach 1's server discriminator
+    return DistGANState(g, g_opt_def.init(g), ds, d_opts, server_d,
+                        jnp.zeros((), jnp.int32), kk)
+
+
+def _d_update_fn(pair, d_opt_def, fcfg: DistGANConfig | None = None):
+    wgan = fcfg is not None and fcfg.loss_type == "wgan"
+
+    def one(d, opt, real, fake):
+        def loss_fn(dp):
+            rs, fs = pair.d_apply(dp, real), pair.d_apply(dp, fake)
+            if wgan:
+                return losses.wgan_d_loss(rs, fs)
+            return losses.d_loss(rs, fs)
+        loss, grads = jax.value_and_grad(loss_fn)(d)
+        updates, opt = d_opt_def.update(grads, opt, d)
+        d = apply_updates(d, updates)
+        if wgan:
+            d = losses.clip_params(d, fcfg.wgan_clip)
+        return d, opt, loss
+    return one
+
+
+def _g_loss_single(pair, fcfg, d, fake):
+    s = pair.d_apply(d, fake)
+    if fcfg.loss_type == "wgan":
+        return losses.wgan_g_loss(s)
+    return losses.g_loss_nonsat(s)
+
+
+def _g_update(pair, g_opt_def, state, loss_fn):
+    loss, grads = jax.value_and_grad(loss_fn)(state.g)
+    updates, g_opt = g_opt_def.update(grads, state.g_opt, state.g)
+    return apply_updates(state.g, updates), g_opt, loss
+
+
+# ---------------------------------------------------------------------------
+# Approach 1: selective-gradient federated server discriminator
+# ---------------------------------------------------------------------------
+
+def make_approach1_step(pair, fcfg: DistGANConfig):
+    g_opt_def, d_opt_def = _opts(fcfg)
+    d_update = _d_update_fn(pair, d_opt_def, fcfg)
+    combiner = COMBINERS[fcfg.combiner]
+
+    def step(state: DistGANState, real):
+        """real: (U, B, ...) per-user private batches."""
+        key, kz1, kz2, ksel = jax.random.split(state.key, 4)
+        B = real.shape[1]
+        fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
+
+        old_ds = state.ds
+        ds, d_opts, d_losses = jax.vmap(d_update, in_axes=(0, 0, 0, None))(
+            state.ds, state.d_opts, real, fake)
+
+        # users upload selected deltas; server folds them (alg. 1 lines 3-5)
+        deltas = jax.tree.map(lambda n, o: n - o, ds, old_ds)
+        sel_keys = jax.random.split(ksel, fcfg.num_users)
+
+        def select_one(delta, k):
+            return select_delta(delta, fcfg.selection, frac=fcfg.upload_frac,
+                                key=k, use_kernel=fcfg.use_topk_kernel)
+
+        masked, kept = jax.vmap(select_one)(deltas, sel_keys)
+        combined = combiner(masked)
+        server_d = jax.tree.map(
+            lambda w, c: (w + fcfg.server_scale * c).astype(w.dtype),
+            state.server_d, combined)
+
+        # download phase (paper §3.1: "users update local model with the
+        # global parameter") — local models re-sync to the server so next
+        # round's deltas are w.r.t. the shared point.
+        U = fcfg.num_users
+        ds = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (U,) + s.shape), server_d)
+
+        # G trains against the *server* D only (alg. 1 lines 7-10)
+        def g_loss(gp):
+            fake_ = pair.g_apply(gp, pair.sample_z(kz2, B))
+            return _g_loss_single(pair, fcfg, server_d, fake_)
+
+        g, g_opt, gl = _g_update(pair, g_opt_def, state, g_loss)
+        new_state = DistGANState(g, g_opt, ds, d_opts, server_d,
+                                 state.step + 1, key)
+        return new_state, {"d_loss": d_losses, "g_loss": gl,
+                           "kept_frac": jnp.mean(kept)}
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Approach 2: averaged-output multi-discriminator
+# ---------------------------------------------------------------------------
+
+def make_approach2_step(pair, fcfg: DistGANConfig):
+    g_opt_def, d_opt_def = _opts(fcfg)
+    d_update = _d_update_fn(pair, d_opt_def, fcfg)
+
+    def step(state: DistGANState, real):
+        key, kz1, kz2 = jax.random.split(state.key, 3)
+        B = real.shape[1]
+        fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
+        ds, d_opts, d_losses = jax.vmap(d_update, in_axes=(0, 0, 0, None))(
+            state.ds, state.d_opts, real, fake)
+
+        # alg. 2 line 4: outputs = mean_i D_i(fake); criterion vs real labels
+        def g_loss(gp):
+            fake_ = pair.g_apply(gp, pair.sample_z(kz2, B))
+            per_user = jax.vmap(lambda d: pair.d_apply(d, fake_))(ds)
+            if fcfg.loss_type == "wgan":
+                return losses.wgan_g_loss_avg(per_user)
+            return losses.g_loss_avg_probs(per_user)
+
+        g, g_opt, gl = _g_update(pair, g_opt_def, state, g_loss)
+        new_state = DistGANState(g, g_opt, ds, d_opts, state.server_d,
+                                 state.step + 1, key)
+        return new_state, {"d_loss": d_losses, "g_loss": gl,
+                           "kept_frac": jnp.float32(1.0)}
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Approach 3: round-robin one-G-vs-many-D
+# ---------------------------------------------------------------------------
+
+def make_approach3_step(pair, fcfg: DistGANConfig):
+    g_opt_def, d_opt_def = _opts(fcfg)
+    d_update = _d_update_fn(pair, d_opt_def, fcfg)
+    U = fcfg.num_users
+
+    def step(state: DistGANState, real):
+        """alg. 3: for each user j in turn — train D_j, then update G
+        against D_j alone."""
+        key = state.key
+        g, g_opt = state.g, state.g_opt
+        ds, d_opts = state.ds, state.d_opts
+        g_losses, d_losses = [], []
+
+        for j in range(U):  # U is static & small; unrolled under jit
+            key, kz1, kz2 = jax.random.split(key, 3)
+            B = real.shape[1]
+            fake = pair.g_apply(g, pair.sample_z(kz1, B))
+            d_j = jax.tree.map(lambda x: x[j], ds)
+            o_j = jax.tree.map(lambda x: x[j], d_opts)
+            d_j, o_j, dl = d_update(d_j, o_j, real[j], fake)
+            ds = jax.tree.map(lambda s, n: s.at[j].set(n), ds, d_j)
+            d_opts = jax.tree.map(lambda s, n: s.at[j].set(n), d_opts, o_j)
+
+            def g_loss(gp, d_j=d_j, kz2=kz2):
+                fake_ = pair.g_apply(gp, pair.sample_z(kz2, B))
+                return _g_loss_single(pair, fcfg, d_j, fake_)
+
+            gl, grads = jax.value_and_grad(g_loss)(g)
+            updates, g_opt = g_opt_def.update(grads, g_opt, g)
+            g = apply_updates(g, updates)
+            g_losses.append(gl)
+            d_losses.append(dl)
+
+        new_state = DistGANState(g, g_opt, ds, d_opts, state.server_d,
+                                 state.step + 1, key)
+        return new_state, {"d_loss": jnp.stack(d_losses),
+                           "g_loss": jnp.mean(jnp.stack(g_losses)),
+                           "kept_frac": jnp.float32(1.0)}
+
+    return jax.jit(step)
+
+
+# ---------------------------------------------------------------------------
+# Baseline: normal single-node GAN on the union data (paper fig. 14/15)
+# ---------------------------------------------------------------------------
+
+def make_baseline_step(pair, fcfg: DistGANConfig):
+    g_opt_def, d_opt_def = _opts(fcfg)
+    d_update = _d_update_fn(pair, d_opt_def, fcfg)
+
+    def step(state: DistGANState, real):
+        """real: (B, ...) union-data batch (no privacy)."""
+        key, kz1, kz2 = jax.random.split(state.key, 3)
+        B = real.shape[0]
+        fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
+        d = jax.tree.map(lambda x: x[0], state.ds)
+        o = jax.tree.map(lambda x: x[0], state.d_opts)
+        d, o, dl = d_update(d, o, real, fake)
+        ds = jax.tree.map(lambda s, n: s.at[0].set(n), state.ds, d)
+        d_opts = jax.tree.map(lambda s, n: s.at[0].set(n), state.d_opts, o)
+
+        def g_loss(gp):
+            fake_ = pair.g_apply(gp, pair.sample_z(kz2, B))
+            return _g_loss_single(pair, fcfg, d, fake_)
+
+        g, g_opt, gl = _g_update(pair, g_opt_def, state, g_loss)
+        return DistGANState(g, g_opt, ds, d_opts, state.server_d,
+                            state.step + 1, key), \
+            {"d_loss": dl[None], "g_loss": gl, "kept_frac": jnp.float32(1.0)}
+
+    return jax.jit(step)
+
+
+STEP_FACTORIES = {
+    "approach1": make_approach1_step,
+    "approach2": make_approach2_step,
+    "approach3": make_approach3_step,
+    "baseline": make_baseline_step,
+}

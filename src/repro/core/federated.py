@@ -1,0 +1,175 @@
+"""Selective parameter sharing (Shokri & Shmatikov 2015), the mechanism
+behind the paper's first approach.
+
+Users compute local weight deltas; only a *selected subset* crosses the
+user boundary.  Selection policies (paper §3.1):
+
+* ``topk``      — largest-|delta| fraction theta (the paper's default),
+* ``threshold`` — |delta| > tau,
+* ``random``    — random fraction theta (Shokri's baseline).
+
+The server folds the uploaded deltas with the paper's rule (algorithm 1
+line 4: "selects the biggest dw_i as max(dw_i)") — an elementwise
+argmax-|.| across users — or with FedAvg-style mean (our baseline for
+comparison).
+
+Two execution modes:
+* host-simulated: deltas stacked on a leading user axis (vmap-style);
+* SPMD: one user per mesh slice, combine via jax.lax collectives inside
+  shard_map (``combine_max_abs_spmd``).  Raw data never crosses the user
+  axis — only these masked deltas do, which is the paper's privacy
+  boundary.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+Selection = Literal["topk", "threshold", "random", "none"]
+
+
+# ---------------------------------------------------------------------------
+# Selection masks (flat)
+# ---------------------------------------------------------------------------
+
+def topk_mask(flat: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Boolean mask keeping the largest-|.| ``frac`` of entries."""
+    n = flat.shape[0]
+    k = max(int(n * frac), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    return jnp.abs(flat) >= thresh
+
+
+def threshold_mask(flat: jnp.ndarray, tau: float) -> jnp.ndarray:
+    return jnp.abs(flat) > tau
+
+
+def random_mask(flat: jnp.ndarray, frac: float, key) -> jnp.ndarray:
+    return jax.random.uniform(key, flat.shape) < frac
+
+
+def select_delta(delta_tree, policy: Selection, *, frac=0.1, tau=0.0,
+                 key=None, use_kernel: bool = False):
+    """Apply a selection policy to a pytree of deltas.
+
+    Returns (masked_tree, kept_fraction).  ``use_kernel`` routes the top-k
+    masking through the Pallas kernel (repro.kernels.topk_select).
+    """
+    flat, unravel = ravel_pytree(delta_tree)
+    if policy == "none":
+        return delta_tree, jnp.float32(1.0)
+    if policy == "topk":
+        if use_kernel:
+            from repro.kernels import ops as kops
+            mask = kops.topk_mask(flat, frac)
+        else:
+            mask = topk_mask(flat, frac)
+    elif policy == "threshold":
+        mask = threshold_mask(flat, tau)
+    elif policy == "random":
+        assert key is not None
+        mask = random_mask(flat, frac, key)
+    else:
+        raise ValueError(policy)
+    kept = jnp.mean(mask.astype(jnp.float32))
+    return unravel(flat * mask), kept
+
+
+# ---------------------------------------------------------------------------
+# Server combination rules
+# ---------------------------------------------------------------------------
+
+def combine_max_abs(deltas_stacked):
+    """Paper's rule on a stacked (U, ...) delta tree: per coordinate, keep
+    the single user's delta with the largest magnitude."""
+
+    def one(d):  # d: (U, ...)
+        idx = jnp.argmax(jnp.abs(d), axis=0, keepdims=True)
+        return jnp.take_along_axis(d, idx, axis=0)[0]
+
+    return jax.tree.map(one, deltas_stacked)
+
+
+def combine_mean(deltas_stacked):
+    """FedAvg baseline: mean over users (ignores zeros' sparsity)."""
+    return jax.tree.map(lambda d: jnp.mean(d, axis=0), deltas_stacked)
+
+
+def combine_masked_mean(deltas_stacked):
+    """Mean over the users that actually uploaded each coordinate
+    (zeros from the selection mask don't dilute)."""
+
+    def one(d):
+        nz = (d != 0).astype(d.dtype)
+        cnt = jnp.maximum(jnp.sum(nz, axis=0), 1)
+        return jnp.sum(d, axis=0) / cnt
+
+    return jax.tree.map(one, deltas_stacked)
+
+
+COMBINERS = {"max_abs": combine_max_abs, "mean": combine_mean,
+             "masked_mean": combine_masked_mean}
+
+
+# ---------------------------------------------------------------------------
+# SPMD combination (inside shard_map, one user per 'users' axis slice)
+# ---------------------------------------------------------------------------
+
+def combine_max_abs_spmd(delta_tree, axis: str = "users"):
+    """Paper's max-|.| rule as collectives: pmax of |delta|, then each user
+    contributes its delta only where it attains the max; psum-normalized
+    for ties.  Only masked deltas cross the axis — never raw data."""
+
+    def one(d):
+        mag = jnp.abs(d)
+        mx = jax.lax.pmax(mag, axis)
+        mine = (mag == mx).astype(d.dtype)
+        ties = jax.lax.psum(mine, axis)
+        return jax.lax.psum(d * mine / jnp.maximum(ties, 1), axis)
+
+    return jax.tree.map(one, delta_tree)
+
+
+def combine_mean_spmd(delta_tree, axis: str = "users"):
+    return jax.tree.map(lambda d: jax.lax.pmean(d, axis), delta_tree)
+
+
+def combine_shared_random_spmd(delta_tree, frac: float, key,
+                               axis: str = "users"):
+    """Shokri's *random-subset* upload policy as a bandwidth-true SPMD
+    collective: all users derive the SAME mask from a shared per-round
+    key, gather the selected coordinates into a dense (frac*N,) buffer,
+    psum only that, and scatter back.  Unlike masking (zeros still cross
+    the wire), the collective bytes here genuinely scale with ``frac`` —
+    this is the paper's "improve the efficiency of information
+    transmission" knob made real (EXPERIMENTS.md §Perf pair C, iter 5).
+
+    Returns (combined_tree, uploaded_fraction)."""
+    flat, unravel = ravel_pytree(delta_tree)
+    n = flat.shape[0]
+    k = max(int(n * frac), 1)
+    # shared mask: same key on every shard => identical permutation
+    perm = jax.random.permutation(key, n)
+    idx = perm[:k]
+    vals = flat[idx]
+    summed = jax.lax.pmean(vals, axis)        # only k values cross the axis
+    out = jnp.zeros_like(flat).at[idx].set(summed)
+    return unravel(out), jnp.float32(k / n)
+
+
+# ---------------------------------------------------------------------------
+# Communication accounting (feeds the roofline's collective term)
+# ---------------------------------------------------------------------------
+
+def upload_bytes(delta_tree, policy: Selection, frac: float) -> int:
+    """Bytes per user per round crossing the privacy boundary.  Sparse
+    uploads ship (index, value) pairs: 4B idx + 4B val per kept entry."""
+    n = sum(int(jnp.size(l)) for l in jax.tree.leaves(delta_tree))
+    if policy == "none":
+        return 4 * n
+    return int(n * frac) * 8

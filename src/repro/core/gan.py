@@ -1,0 +1,204 @@
+"""Generator / discriminator definitions from the paper's §6 SYSTEM
+ARCHITECTURE, in pure JAX.
+
+* MLP pair (paper Tables 1-2, the MNIST configuration):
+    D: in -> Linear -> LeakyReLU -> Linear -> LeakyReLU -> Linear -> (logit)
+    G: z  -> Linear -> ReLU -> Linear -> ReLU -> Linear -> tanh
+* Conv pair (paper Tables 3-4, the CelebA/LSUN DCGAN configuration):
+    D: Conv2d/BN/LeakyReLU x4 -> Conv2d -> (logit)
+    G: ConvTranspose2d/BN/ReLU x4 -> ConvTranspose2d -> tanh
+
+The paper applies Sigmoid inside the net; we emit logits and fold the
+sigmoid into BCE-with-logits (numerically identical, stable).  BatchNorm
+uses batch statistics (train mode) — GAN training never runs BN in eval
+mode in the paper's code, so no running stats are kept.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, axes_of, build, dtype_of
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPGanConfig:
+    data_dim: int = 784          # 28*28
+    z_dim: int = 64
+    g_hidden: int = 256
+    d_hidden: int = 256
+    name: str = "mlp_gan"
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGanConfig:
+    image_size: int = 32         # padded 28->32 or native 32/64
+    channels: int = 1
+    z_dim: int = 100
+    base_filters: int = 64
+    name: str = "conv_gan"
+
+
+# ---------------------------------------------------------------------------
+# MLP pair
+# ---------------------------------------------------------------------------
+
+def mlp_d_decls(cfg: MLPGanConfig):
+    h = cfg.d_hidden
+    return {
+        "l1": {"w": P((cfg.data_dim, h), (None, "ffn")),
+               "b": P((h,), ("ffn",), "zeros")},
+        "l2": {"w": P((h, h), ("ffn", None)), "b": P((h,), (None,), "zeros")},
+        "l3": {"w": P((h, 1), (None, None)), "b": P((1,), (None,), "zeros")},
+    }
+
+
+def mlp_g_decls(cfg: MLPGanConfig):
+    h = cfg.g_hidden
+    return {
+        "l1": {"w": P((cfg.z_dim, h), (None, "ffn")),
+               "b": P((h,), ("ffn",), "zeros")},
+        "l2": {"w": P((h, h), ("ffn", None)), "b": P((h,), (None,), "zeros")},
+        "l3": {"w": P((h, cfg.data_dim), (None, None)),
+               "b": P((cfg.data_dim,), (None,), "zeros")},
+    }
+
+
+def mlp_d_apply(params, x):
+    """x: (B, data_dim) -> logits (B,)."""
+    h = jax.nn.leaky_relu(x @ params["l1"]["w"] + params["l1"]["b"], 0.2)
+    h = jax.nn.leaky_relu(h @ params["l2"]["w"] + params["l2"]["b"], 0.2)
+    return (h @ params["l3"]["w"] + params["l3"]["b"])[:, 0]
+
+
+def mlp_g_apply(params, z):
+    """z: (B, z_dim) -> samples (B, data_dim) in [-1, 1]."""
+    h = jax.nn.relu(z @ params["l1"]["w"] + params["l1"]["b"])
+    h = jax.nn.relu(h @ params["l2"]["w"] + params["l2"]["b"])
+    return jnp.tanh(h @ params["l3"]["w"] + params["l3"]["b"])
+
+
+# ---------------------------------------------------------------------------
+# Conv pair (DCGAN)
+# ---------------------------------------------------------------------------
+
+def _conv_decl(cin, cout, k=4):
+    return {"w": P((k, k, cin, cout), (None, None, None, "ffn"), scale=0.02)}
+
+
+def _bn_decl(c):
+    return {"scale": P((c,), (None,), "ones"), "bias": P((c,), (None,), "zeros")}
+
+
+def conv_d_decls(cfg: ConvGanConfig):
+    f = cfg.base_filters
+    return {
+        "c1": _conv_decl(cfg.channels, f),
+        "c2": _conv_decl(f, 2 * f), "bn2": _bn_decl(2 * f),
+        "c3": _conv_decl(2 * f, 4 * f), "bn3": _bn_decl(4 * f),
+        "c4": _conv_decl(4 * f, 1, k=cfg.image_size // 8),
+    }
+
+
+def conv_g_decls(cfg: ConvGanConfig):
+    f = cfg.base_filters
+    s0 = cfg.image_size // 8
+    return {
+        "c1": _conv_decl(cfg.z_dim, 4 * f, k=s0), "bn1": _bn_decl(4 * f),
+        "c2": _conv_decl(4 * f, 2 * f), "bn2": _bn_decl(2 * f),
+        "c3": _conv_decl(2 * f, f), "bn3": _bn_decl(f),
+        "c4": _conv_decl(f, cfg.channels),
+    }
+
+
+def _batchnorm(x, p, eps=1e-5):
+    mu = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+
+
+def _conv(x, w, stride):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def _conv_transpose(x, w, stride, padding="SAME"):
+    return jax.lax.conv_transpose(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def conv_d_apply(params, x):
+    """x: (B, H, W, C) -> logits (B,)."""
+    h = jax.nn.leaky_relu(_conv(x, params["c1"]["w"], 2), 0.2)
+    h = jax.nn.leaky_relu(_batchnorm(_conv(h, params["c2"]["w"], 2),
+                                     params["bn2"]), 0.2)
+    h = jax.nn.leaky_relu(_batchnorm(_conv(h, params["c3"]["w"], 2),
+                                     params["bn3"]), 0.2)
+    h = jax.lax.conv_general_dilated(
+        h, params["c4"]["w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return h[:, 0, 0, 0]
+
+
+def conv_g_apply(params, z, cfg: ConvGanConfig):
+    """z: (B, z_dim) -> images (B, H, W, C) in [-1, 1]."""
+    s0 = cfg.image_size // 8
+    h = z[:, None, None, :]
+    h = _conv_transpose(h, params["c1"]["w"], 1, padding="VALID")
+    h = jax.nn.relu(_batchnorm(h, params["bn1"]))
+    assert h.shape[1] == s0, (h.shape, s0)
+    h = jax.nn.relu(_batchnorm(_conv_transpose(h, params["c2"]["w"], 2),
+                               params["bn2"]))
+    h = jax.nn.relu(_batchnorm(_conv_transpose(h, params["c3"]["w"], 2),
+                               params["bn3"]))
+    return jnp.tanh(_conv_transpose(h, params["c4"]["w"], 2))
+
+
+# ---------------------------------------------------------------------------
+# Bundles
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GanPair:
+    """Callable bundle: init + apply for one (G, D) family."""
+
+    cfg: object
+    g_decls: object
+    d_decls: object
+    g_apply: object
+    d_apply: object
+    z_dim: int
+
+    def init(self, key, dtype=jnp.float32):
+        kg, kd = jax.random.split(key)
+        g = build(self.g_decls, kg, dtype)
+        d = build(self.d_decls, kd, dtype)
+        return g, d
+
+    def init_user_ds(self, key, num_users: int, dtype=jnp.float32):
+        """Stacked (U, ...) local discriminators, independently initialized."""
+        keys = jax.random.split(key, num_users)
+        return jax.vmap(lambda k: build(self.d_decls, k, dtype))(keys)
+
+    def sample_z(self, key, n: int):
+        return jax.random.normal(key, (n, self.z_dim), jnp.float32)
+
+
+def make_mlp_pair(cfg: MLPGanConfig | None = None) -> GanPair:
+    cfg = cfg or MLPGanConfig()
+    return GanPair(cfg, mlp_g_decls(cfg), mlp_d_decls(cfg),
+                   mlp_g_apply, mlp_d_apply, cfg.z_dim)
+
+
+def make_conv_pair(cfg: ConvGanConfig | None = None) -> GanPair:
+    cfg = cfg or ConvGanConfig()
+    return GanPair(cfg, conv_g_decls(cfg), conv_d_decls(cfg),
+                   lambda p, z: conv_g_apply(p, z, cfg), conv_d_apply,
+                   cfg.z_dim)

@@ -1,0 +1,77 @@
+"""GAN losses.
+
+The paper's training objective is the original minimax GAN with the
+non-saturating generator trick it cites in §4.2 ("Ian Goodfellow proposed
+to replace (1-D(G)) with D(G)").  We emit logits from D and use
+BCE-with-logits throughout.
+
+Approach 2 averages discriminator *outputs* (post-sigmoid probabilities)
+before the criterion — algorithm 2 line 4 — so ``g_loss_avg_probs``
+averages in probability space, not logit space.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bce_with_logits(logits, targets):
+    """Elementwise binary cross-entropy on logits."""
+    return jnp.maximum(logits, 0) - logits * targets + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def d_loss(real_logits, fake_logits):
+    """Discriminator loss: real->1, fake->0."""
+    lr = bce_with_logits(real_logits, jnp.ones_like(real_logits))
+    lf = bce_with_logits(fake_logits, jnp.zeros_like(fake_logits))
+    return jnp.mean(lr) + jnp.mean(lf)
+
+
+def g_loss_nonsat(fake_logits):
+    """Non-saturating generator loss: fake->1."""
+    return jnp.mean(bce_with_logits(fake_logits, jnp.ones_like(fake_logits)))
+
+
+def g_loss_avg_probs(fake_logits_per_user):
+    """Approach 2: average the users' D probabilities, then BCE vs 1.
+
+    fake_logits_per_user: (U, B).
+    """
+    probs = jax.nn.sigmoid(fake_logits_per_user)
+    avg = jnp.mean(probs, axis=0)
+    eps = 1e-7
+    return -jnp.mean(jnp.log(avg + eps))
+
+
+# ---------------------------------------------------------------------------
+# W-GAN (Arjovsky et al., the paper's ref [1]) — beyond-paper extension for
+# the paper's §10 open problem ("the notorious model collapse").  Original
+# weight-clipped form: the critic emits unbounded scores.
+# ---------------------------------------------------------------------------
+
+def wgan_d_loss(real_scores, fake_scores):
+    """Critic loss: maximize E[D(real)] - E[D(fake)]."""
+    return jnp.mean(fake_scores) - jnp.mean(real_scores)
+
+
+def wgan_g_loss(fake_scores):
+    return -jnp.mean(fake_scores)
+
+
+def wgan_g_loss_avg(fake_scores_per_user):
+    """Approach-2 analogue: average the critics' scores (score space is
+    the natural averaging space for W-GAN)."""
+    return -jnp.mean(jnp.mean(fake_scores_per_user, axis=0))
+
+
+def clip_params(params, c: float):
+    """Original W-GAN Lipschitz enforcement: elementwise clip to [-c, c]."""
+    import jax
+    return jax.tree.map(lambda p: jnp.clip(p, -c, c), params)
+
+
+def d_accuracy(real_logits, fake_logits):
+    return 0.5 * (jnp.mean((real_logits > 0).astype(jnp.float32)) +
+                  jnp.mean((fake_logits <= 0).astype(jnp.float32)))

@@ -1,0 +1,151 @@
+"""Round orchestration for Distributed-GAN training: host-side data
+sampling per user, jit'd steps, metric/timing capture, and the paper's
+evaluation criteria (mode coverage, loss trend, wall-clock).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.approaches import (DistGANConfig, DistGANState,
+                                   STEP_FACTORIES, init_state)
+from repro.data.federated import FederatedDataset
+
+
+@dataclasses.dataclass
+class RunResult:
+    g_losses: np.ndarray           # (steps,)
+    d_losses: np.ndarray           # (steps, U)
+    wall_time_s: float
+    step_time_s: float             # steady-state per-step (post-compile)
+    samples: np.ndarray | None
+    state: DistGANState
+    extra: dict
+
+
+def run_distgan(
+    pair,
+    fcfg: DistGANConfig,
+    dataset: FederatedDataset,
+    approach: str,
+    steps: int,
+    batch_size: int = 64,
+    seed: int = 0,
+    eval_samples: int = 2048,
+    sample_fn: Callable | None = None,
+) -> RunResult:
+    """Train with one of {approach1, approach2, approach3, baseline}."""
+    assert approach in STEP_FACTORIES, approach
+    step_fn = STEP_FACTORIES[approach](pair, fcfg)
+    state = init_state(pair, fcfg, jax.random.key(seed),
+                       sync_ds=(approach == "approach1"))
+    rng = np.random.default_rng(seed)
+
+    U, B = fcfg.num_users, batch_size
+    g_losses, d_losses = [], []
+
+    def batch(step_i: int):
+        if approach == "baseline":
+            return jnp.asarray(dataset.union_sampler(rng, B))
+        return jnp.stack([jnp.asarray(dataset.user_batch(u, rng, B))
+                          for u in range(U)])
+
+    # warmup/compile on step 0's shapes
+    t0 = time.perf_counter()
+    state, metrics = step_fn(state, batch(0))
+    jax.block_until_ready(metrics["g_loss"])
+    compile_s = time.perf_counter() - t0
+
+    g_losses.append(float(metrics["g_loss"]))
+    d_losses.append(np.asarray(metrics["d_loss"]))
+
+    t1 = time.perf_counter()
+    for i in range(1, steps):
+        state, metrics = step_fn(state, batch(i))
+        g_losses.append(float(metrics["g_loss"]))
+        d_losses.append(np.asarray(metrics["d_loss"]))
+    jax.block_until_ready(state.g)
+    steady = time.perf_counter() - t1
+
+    samples = None
+    if eval_samples:
+        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
+        samples = np.asarray(pair.g_apply(state.g, z))
+
+    return RunResult(
+        g_losses=np.asarray(g_losses),
+        d_losses=np.stack(d_losses),
+        wall_time_s=compile_s + steady,
+        step_time_s=steady / max(steps - 1, 1),
+        samples=samples,
+        state=state,
+        extra={"compile_s": compile_s, "kept_frac": float(metrics["kept_frac"])},
+    )
+
+
+def loss_trend(losses: np.ndarray, tail_frac: float = 0.25) -> float:
+    """Paper §5.6 criterion: generator loss trends down (with instability).
+    Returns mean(tail) - mean(head); negative = downtrend."""
+    n = len(losses)
+    head = losses[: max(int(n * tail_frac), 1)]
+    tail = losses[-max(int(n * tail_frac), 1):]
+    return float(np.mean(tail) - np.mean(head))
+
+
+def measure_component_times(pair, fcfg, dataset, batch_size: int,
+                            seed: int = 0, iters: int = 30):
+    """Measured building blocks for the §5.5 wall-clock model:
+    t_base  — one baseline step (1 D update + 1 G update, batch B),
+    t_d     — one D update alone (batch B).
+    """
+    import jax
+    from repro.core.approaches import _d_update_fn, _opts
+    _, d_opt_def = _opts(fcfg)
+    g, d = pair.init(jax.random.key(seed))
+    opt = d_opt_def.init(d)
+    rng = np.random.default_rng(seed)
+    real = jnp.asarray(dataset.union_sampler(rng, batch_size))
+    fake = pair.g_apply(g, pair.sample_z(jax.random.key(1), batch_size))
+    d_up = jax.jit(_d_update_fn(pair, d_opt_def))
+    out = d_up(d, opt, real, fake)
+    jax.block_until_ready(out[2])
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = d_up(d, opt, real, fake)
+    jax.block_until_ready(out[2])
+    t_d = (time.perf_counter() - t0) / iters
+
+    base = run_distgan(pair, fcfg, dataset, "baseline", steps=iters,
+                       batch_size=batch_size, seed=seed, eval_samples=0)
+    return base.step_time_s, t_d
+
+
+def effective_epoch_time(result: RunResult, num_users: int, approach: str,
+                         *, t_base: float, t_d: float,
+                         per_samples: int, batch_size: int) -> float:
+    """Paper §5.5 wall-clock model, per ``per_samples`` training samples.
+
+    Baseline consumes B samples per step -> per_samples/B steps of t_base.
+    A deployed distributed round consumes U*B samples (B per user): the U
+    local-D updates run in PARALLEL on the users' own hardware (cost t_d,
+    measured), then the server's G phase runs serially (t_g = t_base-t_d;
+    approach 3 runs it once per user).  Server-side selection/fold
+    overhead is whatever the measured round time can't attribute to the
+    U serialized D updates + G phase (host sim runs users serially).
+    """
+    B, U = batch_size, num_users
+    t_g = max(t_base - t_d, 0.0)
+    if approach == "baseline":
+        return per_samples / B * t_base
+    k_g = U if approach == "approach3" else 1
+    host_accounted = U * t_d + k_g * t_g
+    overhead = max(result.step_time_s - host_accounted, 0.0)
+    deployed_round = t_d + k_g * t_g + overhead
+    rounds = per_samples / (U * B)
+    return rounds * deployed_round

@@ -1,0 +1,184 @@
+"""SPMD Distributed-GAN: the paper's federation mapped onto a mesh axis.
+
+One user == one slice of the ``users`` mesh axis (on the production mesh
+the 2-user topology is literally one user per pod).  Inside ``shard_map``:
+
+* raw data is sharded over ``users`` and NEVER crosses the axis — the only
+  cross-user collectives are on selected deltas (approach 1) or on D
+  probabilities / G gradients (approaches 2/3).  That is the paper's
+  privacy boundary, enforced structurally.
+* approach 1's server-D fold is `combine_max_abs_spmd` (pmax + masked psum)
+  — the parameter server becomes replicated state, the TPU-native idiom.
+* G stays replicated: its gradient contributions are psum'd over users.
+
+Layout convention: stacked user trees (U, ...) are sharded on dim 0; the
+generator and its optimizer state are replicated.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as PS
+
+from repro.core import losses
+from repro.core.approaches import DistGANConfig, DistGANState
+from repro.core.federated import (combine_max_abs_spmd, combine_mean_spmd,
+                                  combine_shared_random_spmd, select_delta)
+from repro.optim import adamw, apply_updates
+
+AXIS = "users"
+
+
+def _opts(fcfg):
+    return (adamw(fcfg.g_lr, b1=fcfg.b1, b2=fcfg.b2),
+            adamw(fcfg.d_lr, b1=fcfg.b1, b2=fcfg.b2))
+
+
+def _unstack(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def _restack(tree):
+    return jax.tree.map(lambda x: x[None], tree)
+
+
+def _specs_for(state: DistGANState, mesh):
+    user_sharded = lambda tree: jax.tree.map(lambda _: PS(AXIS), tree)
+    replicated = lambda tree: jax.tree.map(lambda _: PS(), tree)
+    return DistGANState(
+        g=replicated(state.g), g_opt=replicated(state.g_opt),
+        ds=user_sharded(state.ds), d_opts=user_sharded(state.d_opts),
+        server_d=replicated(state.server_d),
+        step=PS(), key=PS())
+
+
+def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
+    """Returns a jit'd SPMD step: (state, real (U,B,...)) -> (state, metrics).
+
+    ``real`` is sharded over the users axis on dim 0.
+    """
+    g_opt_def, d_opt_def = _opts(fcfg)
+
+    def local_d_update(d, opt, real, fake):
+        def loss_fn(dp):
+            return losses.d_loss(pair.d_apply(dp, real),
+                                 pair.d_apply(dp, fake))
+        loss, grads = jax.value_and_grad(loss_fn)(d)
+        updates, opt = d_opt_def.update(grads, opt, d)
+        return apply_updates(d, updates), opt, loss
+
+    def body(state: DistGANState, real):
+        key, kz1, kz2, ksel = jax.random.split(state.key, 4)
+        B = real.shape[1]
+        my_real = real[0]                     # this shard's private slice
+        d = _unstack(state.ds)
+        opt = _unstack(state.d_opts)
+        fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
+
+        metrics = {}
+        if approach == "approach1":
+            old = d
+            d, opt, dl = local_d_update(d, opt, my_real, fake)
+            delta = jax.tree.map(lambda n, o: n - o, d, old)
+            if fcfg.selection == "shared_random":
+                # bandwidth-true: only frac*N values cross the users axis
+                comb, kept = combine_shared_random_spmd(
+                    delta, fcfg.upload_frac, ksel, AXIS)
+            else:
+                masked, kept = select_delta(delta, fcfg.selection,
+                                            frac=fcfg.upload_frac, key=ksel,
+                                            use_kernel=fcfg.use_topk_kernel)
+                comb = (combine_max_abs_spmd(masked, AXIS)
+                        if fcfg.combiner == "max_abs"
+                        else combine_mean_spmd(masked, AXIS))
+            server_d = jax.tree.map(
+                lambda w, c: (w + fcfg.server_scale * c).astype(w.dtype),
+                state.server_d, comb)
+            d = server_d  # download phase: local D re-syncs to the server
+
+            def g_loss(gp):
+                f = pair.g_apply(gp, pair.sample_z(kz2, B))
+                return losses.g_loss_nonsat(pair.d_apply(server_d, f))
+
+            gl, grads = jax.value_and_grad(g_loss)(state.g)
+            # server_d is replicated -> grads identical; no psum needed
+            metrics["kept_frac"] = kept
+
+        elif approach == "approach2":
+            d, opt, dl = local_d_update(d, opt, my_real, fake)
+
+            def g_loss(gp):
+                f = pair.g_apply(gp, pair.sample_z(kz2, B))
+                p_local = jax.nn.sigmoid(pair.d_apply(d, f))
+                p_avg = jax.lax.pmean(p_local, AXIS)   # alg. 2 line 4
+                return -jnp.mean(jnp.log(p_avg + 1e-7))
+
+            gl, grads = jax.value_and_grad(g_loss)(state.g)
+            # the pmean inside g_loss transposes to a psum of cotangents:
+            # each shard's grad already carries ALL users' paths (verified
+            # against the stacked-host oracle in tests/test_spmd.py), so
+            # combine with pmean — it is idempotent on the replicated value
+            # and irons out per-shard fp noise.
+            grads = jax.tree.map(lambda x: jax.lax.pmean(x, AXIS), grads)
+            server_d = state.server_d
+            metrics["kept_frac"] = jnp.float32(1.0)
+
+        elif approach == "approach3":
+            # Round-robin: in sub-round j only user j's D trains and only
+            # user j's D drives the G update; the G grad is broadcast from
+            # shard j via a masked psum.
+            U = fcfg.num_users
+            me = jax.lax.axis_index(AXIS)
+            g, g_opt = state.g, state.g_opt
+            gl = jnp.float32(0.0)
+            dl = jnp.float32(0.0)
+            kk = key
+            for j in range(U):
+                kk, kz1j, kz2j = jax.random.split(kk, 3)
+                fake_j = pair.g_apply(g, pair.sample_z(kz1j, B))
+                nd, nopt, dlj = local_d_update(d, opt, my_real, fake_j)
+                active = (me == j)
+                pick = lambda a, b: jnp.where(active, a, b)
+                d = jax.tree.map(pick, nd, d)
+                opt = jax.tree.map(pick, nopt, opt)
+                dl = dl + jnp.where(active, dlj, 0.0)
+
+                def g_loss(gp, d=d, kz2j=kz2j):
+                    f = pair.g_apply(gp, pair.sample_z(kz2j, B))
+                    return losses.g_loss_nonsat(pair.d_apply(d, f))
+
+                glj, grads_j = jax.value_and_grad(g_loss)(g)
+                mask = active.astype(jnp.float32)
+                grads_j = jax.tree.map(
+                    lambda x: jax.lax.psum(x * mask, AXIS), grads_j)
+                updates, g_opt = g_opt_def.update(grads_j, g_opt, g)
+                g = apply_updates(g, updates)
+                gl = gl + jax.lax.psum(glj * mask, AXIS) / U
+
+            new_state = DistGANState(g, g_opt, _restack(d), _restack(opt),
+                                     state.server_d, state.step + 1, kk)
+            return new_state, {"d_loss": dl[None], "g_loss": gl,
+                               "kept_frac": jnp.float32(1.0)}
+        else:
+            raise ValueError(approach)
+
+        updates, g_opt = g_opt_def.update(grads, state.g_opt, state.g)
+        g = apply_updates(state.g, updates)
+        new_state = DistGANState(g, g_opt, _restack(d), _restack(opt),
+                                 server_d, state.step + 1, key)
+        return new_state, {"d_loss": dl[None], "g_loss": gl, **metrics}
+
+    def step(state, real):
+        state_specs = _specs_for(state, mesh)
+        metric_specs = {"d_loss": PS(AXIS), "g_loss": PS(),
+                        "kept_frac": PS()}
+        fn = jax.shard_map(body, mesh=mesh,
+                           in_specs=(state_specs, PS(AXIS)),
+                           out_specs=(state_specs, metric_specs),
+                           check_vma=False)
+        return fn(state, real)
+
+    return jax.jit(step)

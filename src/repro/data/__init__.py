@@ -1,0 +1,17 @@
+from repro.data.synthetic import (
+    TokenStream,
+    synthetic_lm_batch,
+    synthetic_batch_for,
+)
+from repro.data.mixtures import (
+    GaussianMixture,
+    make_user_domains,
+    digits_like_mixture,
+)
+from repro.data.federated import federated_split, FederatedDataset
+
+__all__ = [
+    "TokenStream", "synthetic_lm_batch", "synthetic_batch_for",
+    "GaussianMixture", "make_user_domains", "digits_like_mixture",
+    "federated_split", "FederatedDataset",
+]

@@ -1,0 +1,129 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention with
+causal and sliding-window masking and GQA via index-mapped KV heads.
+
+Grid: (batch, q_heads, q_blocks, kv_blocks) — the last dim is sequential
+on TPU, so the (m, l, acc) online-softmax carry lives in VMEM scratch and
+persists across kv iterations.  BlockSpecs keep one (bq, hd) q tile and
+one (bkv, hd) k/v tile in VMEM; MXU dims are 128-aligned by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BKV = 128
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  bq: int, bkv: int, nkv: int):
+    iq = pl.program_id(2)
+    ikv = pl.program_id(3)
+
+    @pl.when(ikv == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+    k_pos = ikv * bkv + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+    mask = jnp.ones((bq, bkv), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+
+    def compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)           # (bkv, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    if causal or window:
+        # skip fully-masked kv blocks (the flash trick that makes causal
+        # attention ~2x cheaper; for windows, only the diagonal band runs)
+        first_q = iq * bq
+        last_q = iq * bq + bq - 1
+        first_k = ikv * bkv
+        last_k = ikv * bkv + bkv - 1
+        live = jnp.bool_(True)
+        if causal:
+            live &= first_k <= last_q
+        if window:
+            live &= last_k > first_q - window
+        pl.when(live)(compute)
+    else:
+        compute()
+
+    @pl.when(ikv == nkv - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, scale=None,
+                           bq=DEFAULT_BQ, bkv=DEFAULT_BKV,
+                           interpret: bool = True):
+    """q: (B,S,H,hd), k/v: (B,T,K,hd) with H % K == 0 -> (B,S,H,hd).
+
+    Layouts are transposed to head-major (B,H,S,hd) for the kernel so each
+    grid cell streams one head's tiles.
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    assert S % bq == 0 and T % bkv == 0, (S, T, bq, bkv)
+    group = H // K
+
+    qt = jnp.moveaxis(q, 2, 1)     # (B,H,S,hd)
+    kt = jnp.moveaxis(k, 2, 1)     # (B,K,T,hd)
+    vt = jnp.moveaxis(v, 2, 1)
+
+    nq, nkv = S // bq, T // bkv
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bkv=bkv, nkv=nkv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bkv, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,42 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs op-by-op in Python, validating the exact program a
+TPU would run.  On a real TPU backend ``interpret`` flips to False and the
+same call sites compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+from repro.kernels.topk_select import topk_mask_pallas
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("frac",))
+def topk_mask(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+    return topk_mask_pallas(x, frac, interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "scale", "bq", "bkv"))
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None,
+                    bq=128, bkv=128):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  scale=scale, bq=bq, bkv=bkv,
+                                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=256):
+    return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=chunk,
+                           interpret=_interpret())

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the shape/
+dtype sweep tests assert against)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_select import BLOCK
+
+
+def topk_mask_ref(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Block-local magnitude top-k mask, same semantics as the kernel:
+    per BLOCK-sized slice, keep entries with |x| >= the k-th largest."""
+    n = x.shape[0]
+    pad = (-n) % BLOCK
+    xp = jnp.pad(x, (0, pad)).reshape(-1, BLOCK)
+    k = max(int(BLOCK * frac), 1)
+    kth = jax.lax.top_k(jnp.abs(xp), k)[0][:, -1:]
+    mask = jnp.abs(xp) >= kth
+    return mask.reshape(-1)[:n]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Dense attention oracle matching flash_attention_pallas."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    G = H // K
+    qg = q.reshape(B, S, K, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * scale
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    s = jnp.where(mask[None, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, *, chunk: int = 256):
+    """Sequential-recurrence oracle for the SSD kernel (O(S) scan, exact)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)   # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                 # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        decay = jnp.exp(dtt * Af)             # (B,H)
+        state = state * decay[..., None, None] + \
+            jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((Bsz, H, N, P), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(Bh, 1, 0), jnp.moveaxis(Ch, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config lowers + compiles for
+every (architecture x input shape) on the production meshes, and extract
+the roofline terms from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all            # 16x16 baseline sweep
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+
+Artifacts: experiments/dryrun/<arch>__<shape>__<mesh>.json, read by
+benchmarks/roofline_table.py and EXPERIMENTS.md.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import input_specs
+from repro.roofline.analysis import (collective_bytes_from_hlo, model_flops,
+                                     roofline_terms)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# long_500k needs sub-quadratic attention: runs for SSM/hybrid natively and
+# for yi-34b under the sliding-window serve variant (DESIGN.md §4); the
+# other full-attention archs skip it (recorded).
+LONG_OK = {"mamba2-780m", "recurrentgemma-9b"}
+LONG_WINDOWED = {"yi-34b": 8192}
+
+
+def pair_plan(arch: str, shape: str) -> str:
+    """'run' | 'run-windowed' | 'skip'."""
+    if shape != "long_500k":
+        return "run"
+    if arch in LONG_OK:
+        return "run"
+    if arch in LONG_WINDOWED:
+        return "run-windowed"
+    return "skip"
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool = False,
+            rules=None, remat: str = None, save: bool = True,
+            tag: str = "", unroll: bool = False) -> dict:
+    cfg = get_config(arch)
+    if remat:
+        cfg = dataclasses.replace(cfg, remat=remat)
+    if unroll:
+        # unrolled layers: XLA cost_analysis counts every layer (scan
+        # bodies are costed once) -> accurate roofline FLOPs/bytes
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    plan = pair_plan(arch, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "plan": plan,
+           "tag": tag, "unroll": unroll}
+    if plan == "skip":
+        rec["status"] = "skipped (quadratic attention at 524k; see DESIGN.md)"
+        return _finish(rec, save)
+    if plan == "run-windowed":
+        cfg = dataclasses.replace(cfg, window=LONG_WINDOWED[arch])
+        rec["variant"] = f"sliding_window={cfg.window}"
+
+    shp = INPUT_SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    from repro.sharding.rules import DEFAULT_RULES
+    rules = rules or DEFAULT_RULES
+
+    t0 = time.time()
+    try:
+        bundle = input_specs(cfg, shp, mesh, rules)
+        from jax.sharding import NamedSharding, PartitionSpec
+        in_sh = jax.tree.map(
+            lambda s: NamedSharding(mesh, s), bundle.in_shardings,
+            is_leaf=lambda x: isinstance(x, PartitionSpec))
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=in_sh)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes_from_hlo(hlo)
+        bytes_per_dev = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                         - mem.alias_size_in_bytes + mem.temp_size_in_bytes)
+        rep = roofline_terms(
+            arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+            cost=cost, collective=coll, model_fl=model_flops(cfg, shp),
+            bytes_per_device=float(bytes_per_dev))
+        rec.update(rep.to_dict())
+        rec["status"] = "ok"
+        rec["memory_analysis"] = {
+            "argument_size_in_bytes": mem.argument_size_in_bytes,
+            "output_size_in_bytes": mem.output_size_in_bytes,
+            "temp_size_in_bytes": mem.temp_size_in_bytes,
+            "alias_size_in_bytes": mem.alias_size_in_bytes,
+        }
+        rec["collectives"] = coll
+        rec["lower_s"] = round(t_lower, 1)
+        rec["compile_s"] = round(t_compile, 1)
+    except Exception as e:  # noqa: BLE001 — a failure IS the result here
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _finish(rec, save)
+
+
+def _layer_points(cfg):
+    """Two unrolled depths (L1, L2) that preserve the arch's layer-pattern
+    structure, for the linear-in-depth extrapolation."""
+    if cfg.arch_type == "hybrid":
+        period = len(cfg.block_pattern)
+        tail = cfg.num_layers - (cfg.num_layers // period) * period
+        return (period + tail, 2 * period + tail)
+    if cfg.arch_type == "moe" and cfg.first_dense_layers:
+        nd = cfg.first_dense_layers
+        return (nd + 2, nd + 4)
+    return (2, 4)
+
+
+def run_one_extrapolated(arch: str, shape: str, *, rules=None,
+                         remat: str = None, save: bool = True,
+                         tag: str = "roofline", overrides: dict = None) -> dict:
+    """Accurate roofline terms without compiling the full unrolled depth:
+    every cost (FLOPs, bytes, per-layer collectives) is exactly linear in
+    the layer count, so two small unrolled compiles (L1, L2) give slope +
+    intercept, evaluated at the true depth.  memory_analysis temp bytes are
+    extrapolated the same way (approximate: activation liveness is ~linear
+    without remat)."""
+    cfg0 = get_config(arch)
+    plan = pair_plan(arch, shape)
+    mesh_name = "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "plan": plan,
+           "tag": tag, "method": "2-point-linear-extrapolation"}
+    if plan == "skip":
+        rec["status"] = "skipped (quadratic attention at 524k; see DESIGN.md)"
+        return _finish(rec, save)
+    if plan == "run-windowed":
+        cfg0 = dataclasses.replace(cfg0, window=LONG_WINDOWED[arch])
+        rec["variant"] = f"sliding_window={cfg0.window}"
+    if remat:
+        cfg0 = dataclasses.replace(cfg0, remat=remat)
+    if overrides:
+        cfg0 = dataclasses.replace(cfg0, **overrides)
+        rec["overrides"] = dict(overrides)
+
+    shp = INPUT_SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=False)
+    chips = mesh.devices.size
+    from repro.sharding.rules import DEFAULT_RULES
+    rules = rules or DEFAULT_RULES
+    L1, L2 = _layer_points(cfg0)
+    L_true = cfg0.num_layers
+
+    def costs_at(L):
+        cfg = dataclasses.replace(cfg0, num_layers=L, scan_layers=False)
+        if cfg.arch_type == "audio":
+            # encoder depth scales with the same multiplier
+            enc = max(round(cfg0.num_encoder_layers * L / L_true), 1)
+            cfg = dataclasses.replace(cfg, num_encoder_layers=enc)
+        bundle = input_specs(cfg, shp, mesh, rules)
+        from jax.sharding import NamedSharding, PartitionSpec
+        in_sh = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                             bundle.in_shardings,
+                             is_leaf=lambda x: isinstance(x, PartitionSpec))
+        kw = {}
+        if bundle.out_shardings is not None:
+            kw["out_shardings"] = jax.tree.map(
+                lambda s: NamedSharding(mesh, s), bundle.out_shardings,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+        with mesh:
+            compiled = jax.jit(bundle.fn, in_shardings=in_sh, **kw) \
+                .lower(*bundle.args).compile()
+        cost = compiled.cost_analysis()
+        coll = collective_bytes_from_hlo(compiled.as_text())
+        mem = compiled.memory_analysis()
+        return {
+            "flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.get("total", 0.0)),
+            "bytes_per_dev": float(mem.argument_size_in_bytes +
+                                   mem.output_size_in_bytes -
+                                   mem.alias_size_in_bytes +
+                                   mem.temp_size_in_bytes),
+            "coll_detail": coll,
+        }
+
+    t0 = time.time()
+    try:
+        c1, c2 = costs_at(L1), costs_at(L2)
+
+        def extrap(key):
+            slope = (c2[key] - c1[key]) / (L2 - L1)
+            return c1[key] + slope * (L_true - L1)
+
+        cost = {"flops": extrap("flops"), "bytes accessed": extrap("bytes")}
+        coll = {"total": extrap("coll")}
+        rep = roofline_terms(
+            arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+            cost=cost, collective=coll, model_fl=model_flops(cfg0, shp),
+            bytes_per_device=extrap("bytes_per_dev"))
+        rec.update(rep.to_dict())
+        rec["status"] = "ok"
+        rec["extrapolation"] = {"L1": L1, "L2": L2, "L_true": L_true,
+                                "c1": {k: v for k, v in c1.items()
+                                       if k != "coll_detail"},
+                                "c2": {k: v for k, v in c2.items()
+                                       if k != "coll_detail"}}
+        rec["collectives_at_L2"] = c2["coll_detail"]
+        rec["compile_s"] = round(time.time() - t0, 1)
+        rec["lower_s"] = 0.0
+    except Exception as e:  # noqa: BLE001
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return _finish(rec, save)
+
+
+def _finish(rec: dict, save: bool) -> dict:
+    if save:
+        os.makedirs(ART_DIR, exist_ok=True)
+        suffix = f"__{rec['tag']}" if rec.get("tag") else ""
+        path = os.path.join(
+            ART_DIR, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{suffix}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = rec["status"]
+    extra = ""
+    if status == "ok":
+        extra = (f" dom={rec['dominant']} comp={rec['compute_s']:.3e}s"
+                 f" mem={rec['memory_s']:.3e}s coll={rec['collective_s']:.3e}s"
+                 f" useful={rec['useful_flops_ratio']:.2f}"
+                 f" (lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+    elif status == "FAIL":
+        extra = " " + rec["error"][:200]
+    print(f"[dryrun] {rec['arch']} x {rec['shape']} @ {rec['mesh']}: "
+          f"{status}{extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll layer stacks for accurate cost_analysis")
+    ap.add_argument("--extrapolate", action="store_true",
+                    help="accurate roofline via 2-point linear depth fit")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf variants)")
+    ap.add_argument("--rules", default="default",
+                    help="sharding rule-set (default | dp_only)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        overrides[k] = v
+
+    if args.all:
+        archs = ARCH_IDS_PUBLIC
+        shapes = list(INPUT_SHAPES)
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        archs, shapes = [args.arch], [args.shape]
+
+    n_fail = 0
+    for a in archs:
+        for s in shapes:
+            from repro.sharding.rules import NAMED_RULES
+            rules = NAMED_RULES[args.rules]
+            if args.extrapolate:
+                rec = run_one_extrapolated(a, s, remat=args.remat,
+                                           tag=args.tag or "roofline",
+                                           overrides=overrides or None,
+                                           rules=rules)
+            else:
+                rec = run_one(a, s, multi_pod=args.multi_pod,
+                              remat=args.remat, tag=args.tag,
+                              unroll=args.unroll)
+            n_fail += rec["status"] == "FAIL"
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+ARCH_IDS_PUBLIC = [
+    "mamba2-780m", "seamless-m4t-medium", "recurrentgemma-9b",
+    "deepseek-moe-16b", "stablelm-1.6b", "tinyllama-1.1b", "yi-34b",
+    "qwen2-72b", "chameleon-34b", "deepseek-v2-lite-16b",
+]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""Step functions + input/parameter sharding specs shared by the dry-run,
+the trainer, and the server."""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.cache import cache_logical_axes, cache_spec
+from repro.models.common import dtype_of
+from repro.optim import adamw, apply_updates, global_norm_clip
+from repro.sharding.rules import AxisRules, DEFAULT_RULES, logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# Sharding spec derivation
+# ---------------------------------------------------------------------------
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    shapes = M.param_shapes(cfg)
+    logical = M.param_logical_axes(cfg)
+    return jax.tree.map(
+        lambda s, ax: logical_to_spec(ax, s.shape, mesh, rules),
+        shapes, logical, is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def _spec_tree_to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+def batch_pspec(cfg: ModelConfig, mesh: Mesh, global_batch: int,
+                rules: AxisRules = DEFAULT_RULES) -> PS:
+    return logical_to_spec(("batch",), (global_batch,), mesh, rules)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, shp: ShapeConfig,
+                rules: AxisRules = DEFAULT_RULES):
+    """(ShapeDtypeStructs, PartitionSpecs) for a train/prefill batch."""
+    B, S = shp.global_batch, shp.seq_len
+    bspec = batch_pspec(cfg, mesh, B, rules)
+    structs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+               "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    specs = {"tokens": PS(*bspec, None), "targets": PS(*bspec, None)}
+    if cfg.arch_type == "audio":
+        s_src = max(S // cfg.encoder_downsample, 1)
+        structs["src_embeds"] = jax.ShapeDtypeStruct(
+            (B, s_src, cfg.d_model), dtype_of(cfg.compute_dtype))
+        specs["src_embeds"] = PS(*bspec, None, None)
+    return structs, specs
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                 rules: AxisRules = DEFAULT_RULES):
+    spec_shapes = cache_spec(cfg, batch, max_len)
+    logical = cache_logical_axes(cfg)
+    return jax.tree.map(
+        lambda s, ax: logical_to_spec(ax, s.shape, mesh, rules),
+        spec_shapes, logical,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def zero1_specs(param_shapes, pspecs, mesh: Mesh):
+    """ZeRO-1 moment sharding: additionally shard each f32 Adam moment over
+    the data axis on the first dimension that is (a) unsharded and (b)
+    divisible — the moments are only touched elementwise in the update, so
+    this costs one reduce-scatter-shaped resharding of grads instead of
+    keeping 8 bytes/param replicated across the data axis."""
+    data_size = dict(zip(mesh.axis_names, mesh.devices.shape)).get("data", 1)
+
+    def one(shape_struct, spec):
+        entries = list(spec) + [None] * (len(shape_struct.shape) - len(spec))
+        used = {a for e in entries if e is not None
+                for a in ((e,) if isinstance(e, str) else e)}
+        if "data" in used:
+            return PS(*entries)  # param spec already consumes the data axis
+        for i, (dim, e) in enumerate(zip(shape_struct.shape, entries)):
+            if e is None and data_size > 1 and dim % data_size == 0:
+                entries[i] = "data"
+                break
+        return PS(*entries)
+
+    return jax.tree.map(one, param_shapes, pspecs,
+                        is_leaf=lambda x: isinstance(x, PS))
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_optimizer(cfg: ModelConfig, lr=3e-4):
+    return adamw(lr, b1=0.9, b2=0.95, weight_decay=0.1)
+
+
+def make_train_step(cfg: ModelConfig, opt=None, clip_norm: float = 1.0):
+    opt = opt or make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, batch, cfg)
+        if cfg.grad_sync_dtype:
+            # cast before the (GSPMD-inserted) data-parallel all-reduce:
+            # the synced tensors, and hence the collective bytes, halve.
+            # The paper's "improve the efficiency of information
+            # transmission" knob, applied to the LM substrate.
+            gd = dtype_of(cfg.grad_sync_dtype)
+            grads = jax.tree.map(lambda g: g.astype(gd), grads)
+        grads, gnorm = global_norm_clip(grads, clip_norm)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, tokens, index):
+        return M.decode_step(params, cache, tokens, index, cfg)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Dry-run assembly: everything jit.lower needs for one (arch, shape, mesh)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LoweringBundle:
+    fn: object
+    args: tuple           # ShapeDtypeStructs
+    in_shardings: object
+    kind: str
+    out_shardings: object = None  # None -> GSPMD-propagated
+
+
+def serve_max_len(cfg: ModelConfig, shp: ShapeConfig) -> int:
+    return shp.seq_len
+
+
+def input_specs(cfg: ModelConfig, shp: ShapeConfig, mesh: Mesh,
+                rules: AxisRules = DEFAULT_RULES) -> LoweringBundle:
+    """ShapeDtypeStruct stand-ins + shardings for one (arch x shape)."""
+    pspecs = param_pspecs(cfg, mesh, rules)
+
+    if shp.kind in ("train", "prefill"):
+        structs, bspecs = batch_specs(cfg, mesh, shp, rules)
+        if shp.kind == "train":
+            step_fn, opt = make_train_step(cfg)
+            params = M.param_shapes(cfg)
+            opt_state = jax.eval_shape(opt.init, params)
+            mom_specs = pspecs
+            if cfg.zero1:
+                mom_specs = zero1_specs(params, pspecs, mesh)
+            opt_specs = {"mu": mom_specs, "nu": mom_specs, "step": PS()}
+            return LoweringBundle(
+                fn=step_fn,
+                args=(params, opt_state, structs),
+                in_shardings=(pspecs, opt_specs, bspecs),
+                kind="train",
+            )
+        # prefill: loss-less forward.  Keep the (huge, f32) logits
+        # vocab-sharded on the way out — leaving them to propagation lets
+        # GSPMD replicate them (a ~2x-logits all-reduce per EXPERIMENTS.md
+        # §Perf pair A, iteration 4).
+        fwd = lambda params, batch: M.forward(params, batch, cfg)[0]
+        params = M.param_shapes(cfg)
+        logits_spec = logical_to_spec(
+            ("batch", None, "vocab"),
+            (shp.global_batch, shp.seq_len, cfg.vocab_size), mesh, rules)
+        return LoweringBundle(fn=fwd, args=(params, structs),
+                              in_shardings=(pspecs, bspecs), kind="prefill",
+                              out_shardings=logits_spec)
+
+    # decode
+    B = shp.global_batch
+    T = serve_max_len(cfg, shp)
+    cspecs = cache_pspecs(cfg, mesh, B, T, rules)
+    cache_structs = cache_spec(cfg, B, T)
+    bspec = batch_pspec(cfg, mesh, B, rules)
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    serve = make_serve_step(cfg)
+    params = M.param_shapes(cfg)
+    return LoweringBundle(
+        fn=serve,
+        args=(params, cache_structs, tokens, index),
+        in_shardings=(param_pspecs(cfg, mesh, rules), cspecs,
+                      PS(*bspec, None), PS()),
+        kind="decode",
+    )

@@ -1,0 +1,17 @@
+from repro.models.model import (
+    init_params,
+    param_logical_axes,
+    forward,
+    loss_fn,
+    decode_step,
+    init_cache,
+)
+
+__all__ = [
+    "init_params",
+    "param_logical_axes",
+    "forward",
+    "loss_fn",
+    "decode_step",
+    "init_cache",
+]

@@ -1,0 +1,295 @@
+"""Attention: GQA/MHA (full, causal, sliding-window), MLA (DeepSeek-V2
+compressed-KV), cross-attention, and single-token decode against a cache.
+
+All functions are shape-polymorphic pure JAX; the Pallas flash-attention
+kernel in ``repro.kernels`` is an optional drop-in for the causal path
+(enabled via ``use_flash``) — the default jnp path is the oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, apply_rope, norm_decl, apply_norm, softcap
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def attn_decls(cfg):
+    d, H, K, hd = cfg.d_model, cfg.padded_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.use_mla:
+        qk_hd = cfg.nope_head_dim + cfg.rope_head_dim
+        decls = {
+            "wq": P((d, H, qk_hd), ("embed", "heads", None)),
+            "w_dkv": P((d, cfg.kv_lora_rank), ("embed", "kv_lora")),
+            "w_kr": P((d, cfg.rope_head_dim), ("embed", None)),
+            "kv_norm": norm_decl(cfg, cfg.kv_lora_rank),
+            "w_uk": P((cfg.kv_lora_rank, H, cfg.nope_head_dim),
+                      ("kv_lora", "heads", None)),
+            "w_uv": P((cfg.kv_lora_rank, H, cfg.v_head_dim),
+                      ("kv_lora", "heads", None)),
+            "wo": P((H, cfg.v_head_dim, d), ("heads", None, "embed")),
+        }
+        return decls
+    decls = {
+        "wq": P((d, H, hd), ("embed", "heads", None)),
+        "wk": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wo": P((H, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        decls["bq"] = P((H, hd), ("heads", None), "zeros")
+        decls["bk"] = P((K, hd), ("kv_heads", None), "zeros")
+        decls["bv"] = P((K, hd), ("kv_heads", None), "zeros")
+    if cfg.qk_norm:
+        decls["q_norm"] = {"scale": P((hd,), (None,), "zeros")}
+        decls["k_norm"] = {"scale": P((hd,), (None,), "zeros")}
+    return decls
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product attention (grouped)
+# ---------------------------------------------------------------------------
+
+def sdpa(q, k, v, mask, scale: float, cap: float = 0.0):
+    """q: (B,S,H,dq)  k: (B,T,K,dq)  v: (B,T,K,dv)  mask: broadcastable to
+    (B,K,G,S,T) with True = attend."""
+    B, S, H, dq = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, S, K, G, dq)
+    logits = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(B, S, K * G, v.shape[-1])
+
+
+def causal_mask(S: int, T: int, q_offset=0, window: int = 0):
+    """(1,1,1,S,T) boolean mask; window=0 means full causal."""
+    qp = jnp.arange(S)[:, None] + q_offset
+    kp = jnp.arange(T)[None, :]
+    m = kp <= qp
+    if window:
+        m &= kp > qp - window
+    return m[None, None, None]
+
+
+def blockwise_sdpa(q, k, v, scale: float, *, causal=True, window=0,
+                   block=512, cap: float = 0.0):
+    """Online-softmax attention via lax.scan over kv blocks — the flash
+    recurrence in pure jnp.  Never materializes the (S x T) score matrix,
+    so the HLO memory term drops from O(S*T) to O(S*block); this is the
+    dry-run-costable stand-in for the Pallas flash kernel (same math,
+    validated against sdpa in tests)."""
+    B, S, H, dq = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    assert T % block == 0, (T, block)
+    nb = T // block
+    qg = q.reshape(B, S, K, G, dq)
+    kb = jnp.moveaxis(k.reshape(B, nb, block, K, dq), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nb, block, K, dq), 1, 0)
+    qpos = jnp.arange(S)
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kblk, vblk, ib = inp
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        kpos = ib * block + jnp.arange(block)
+        mask = jnp.ones((S, block), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = alpha[..., None] * acc + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(v.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, K, G, S), NEG_INF, jnp.float32),
+            jnp.zeros((B, K, G, S), jnp.float32),
+            jnp.zeros((B, K, G, S, v.shape[-1]), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init,
+                                  (kb, vb, jnp.arange(nb)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(v.dtype)
+    return jnp.moveaxis(out, 3, 1).reshape(B, S, H, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA) attention
+# ---------------------------------------------------------------------------
+
+def _project_qkv(params, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if cfg.qk_norm:
+        from repro.models.common import rms_norm
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    return q, k, v
+
+
+def attn_forward(params, x, cfg, *, positions, causal=True, window=0,
+                 use_flash=False):
+    """Full-sequence attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
+    if use_flash:
+        from repro.kernels import ops as kops
+        blk = min(128, S)
+        out = kops.flash_attention(q, k, v, causal=causal, window=window,
+                                   scale=scale, bq=blk, bkv=blk)
+    elif cfg.attn_impl == "blockwise":
+        out = blockwise_sdpa(q, k, v, scale, causal=causal, window=window,
+                             block=min(cfg.attn_block, S))
+    else:
+        if causal:
+            mask = causal_mask(S, S, 0, window)
+        else:
+            mask = jnp.ones((1, 1, 1, S, S), bool)
+        out = sdpa(q, k, v, mask, scale)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def attn_decode(params, x, cfg, cache, index, *, window=0):
+    """One-token decode. x: (B,1,d). cache: {"k": (B,T,K,hd), "v": ...};
+    T = window size for sliding-window layers, else max_seq.
+    ``index`` is the absolute position of the new token (scalar int32)."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(params, x, cfg)
+    pos = jnp.full((B, 1), index, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+    T = cache["k"].shape[1]
+    slot = jnp.where(window > 0, index % T, index)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kp = jnp.arange(T)
+    if window:
+        # ring buffer: slot s holds position index - ((index - s) mod T)
+        pos_of_slot = index - ((index - kp) % T)
+        valid = (pos_of_slot >= 0) & (pos_of_slot > index - window) & \
+                (pos_of_slot <= index)
+    else:
+        valid = kp <= index
+    mask = valid[None, None, None, None, :]
+    out = sdpa(q, k, v, mask, 1.0 / math.sqrt(cfg.head_dim))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec)
+# ---------------------------------------------------------------------------
+
+def cross_attn_decls(cfg):
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": P((d, H, hd), ("embed", "heads", None)),
+        "wk": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wv": P((d, K, hd), ("embed", "kv_heads", None)),
+        "wo": P((H, hd, d), ("heads", None, "embed")),
+    }
+
+
+def cross_attn_forward(params, x, enc_out, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("btd,dhk->bthk", enc_out, params["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc_out, params["wv"])
+    T = k.shape[1]
+    mask = jnp.ones((1, 1, 1, x.shape[1], T), bool)
+    out = sdpa(q, k, v, mask, 1.0 / math.sqrt(cfg.head_dim))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_forward(params, x, cfg, *, positions):
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nhd, rhd = cfg.nope_head_dim, cfg.rope_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :nhd], q[..., nhd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_kv = apply_norm(params["kv_norm"], c_kv, cfg)
+    k_rope = apply_rope(jnp.einsum("bsd,dr->bsr", x, params["w_kr"]),
+                        positions, cfg.rope_theta)
+
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"])
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  (B, S, H, rhd))], axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    mask = causal_mask(S, S)
+    out = sdpa(qfull, k, v, mask, 1.0 / math.sqrt(nhd + rhd))
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def mla_decode(params, x, cfg, cache, index):
+    """Decode against the *compressed* MLA cache: {"c_kv": (B,T,r),
+    "k_rope": (B,T,rhd)} — 512+64 floats per token instead of
+    2*H*head_dim.  Up-projections are recomputed per step."""
+    B = x.shape[0]
+    H = cfg.num_heads
+    nhd, rhd = cfg.nope_head_dim, cfg.rope_head_dim
+    pos = jnp.full((B, 1), index, jnp.int32)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    q_nope, q_rope = q[..., :nhd], q[..., nhd:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c_new = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])
+    c_new = apply_norm(params["kv_norm"], c_new, cfg)
+    kr_new = apply_rope(jnp.einsum("bsd,dr->bsr", x, params["w_kr"]),
+                        pos, cfg.rope_theta)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, index, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, index, 0))
+
+    T = c_kv.shape[1]
+    # Absorbed attention: fold w_uk into the query so scores are computed
+    # directly against the compressed cache (no T-length k materialization).
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, params["w_uk"])  # (B,1,H,r)
+    s_nope = jnp.einsum("bshr,btr->bhst", q_lat, c_kv)
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, k_rope)
+    logits = (s_nope + s_rope) / math.sqrt(nhd + rhd)
+    valid = (jnp.arange(T) <= index)[None, None, None, :]
+    logits = jnp.where(valid, logits, NEG_INF)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    ctx = jnp.einsum("bhst,btr->bshr", probs.astype(c_kv.dtype), c_kv)
+    out = jnp.einsum("bshr,rhk->bshk", ctx, params["w_uv"])
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

@@ -1,0 +1,113 @@
+"""Decode-cache pytrees per architecture family.
+
+Caches are plain nested dicts whose leaves carry a leading ``layers`` (or
+``groups``) dim so they scan together with the stacked layer params.
+``cache_spec`` returns ShapeDtypeStructs (for dry-runs — no allocation);
+``init_cache`` materializes zeros (for real decode on CPU smoke tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dtype_of
+
+
+def _attn_kv(L, B, T, K, hd, dt):
+    return {"k": jax.ShapeDtypeStruct((L, B, T, K, hd), dt),
+            "v": jax.ShapeDtypeStruct((L, B, T, K, hd), dt)}
+
+
+def cache_spec(cfg, batch: int, max_len: int):
+    """ShapeDtypeStruct pytree for the decode cache."""
+    dt = dtype_of(cfg.compute_dtype)
+    f32 = jnp.float32
+    L, B = cfg.num_layers, batch
+    at = cfg.arch_type
+
+    if at == "ssm":
+        H, N, P_ = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+        W, di, GN = cfg.conv_width, cfg.d_inner, cfg.ssm_n_groups * cfg.ssm_state
+        return {
+            "ssd": jax.ShapeDtypeStruct((L, B, H, N, P_), f32),
+            "conv_x": jax.ShapeDtypeStruct((L, B, W - 1, di), dt),
+            "conv_B": jax.ShapeDtypeStruct((L, B, W - 1, GN), dt),
+            "conv_C": jax.ShapeDtypeStruct((L, B, W - 1, GN), dt),
+        }
+
+    if at == "hybrid":
+        period = len(cfg.block_pattern)
+        G = cfg.num_layers // period
+        tail = cfg.num_layers - G * period
+        r, W = cfg.lru_width, cfg.conv_width
+        Tw = min(max_len, cfg.window) if cfg.window else max_len
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        spec = {
+            "groups": {
+                "rec1": {"h": jax.ShapeDtypeStruct((G, B, r), f32),
+                         "conv": jax.ShapeDtypeStruct((G, B, W - 1, r), dt)},
+                "rec2": {"h": jax.ShapeDtypeStruct((G, B, r), f32),
+                         "conv": jax.ShapeDtypeStruct((G, B, W - 1, r), dt)},
+                "attn": _attn_kv(G, B, Tw, K, hd, dt),
+            },
+        }
+        if tail:
+            spec["tail"] = {"h": jax.ShapeDtypeStruct((tail, B, r), f32),
+                            "conv": jax.ShapeDtypeStruct((tail, B, W - 1, r), dt)}
+        return spec
+
+    if cfg.use_mla:
+        return {
+            "c_kv": jax.ShapeDtypeStruct((L, B, max_len, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((L, B, max_len, cfg.rope_head_dim), dt),
+        }
+
+    if cfg.is_encoder_decoder:
+        S_src = max(max_len // cfg.encoder_downsample, 1)
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        return {
+            "self": _attn_kv(L, B, max_len, K, hd, dt),
+            "cross": _attn_kv(L, B, S_src, K, hd, dt),
+        }
+
+    # dense / moe / vlm self-attention
+    T = min(max_len, cfg.window) if cfg.window else max_len
+    return _attn_kv(L, B, T, cfg.num_kv_heads, cfg.head_dim, dt)
+
+
+def init_cache(cfg, batch: int, max_len: int):
+    spec = cache_spec(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def cache_logical_axes(cfg):
+    """Logical axes for cache leaves (drives decode in_shardings)."""
+    def axes_for(path_leaf_shape):
+        raise NotImplementedError
+
+    # Simple rule set keyed by leaf name.
+    def one(path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(leaf.shape)
+        if name in ("k", "v"):
+            return ("layers", "batch", None, "kv_heads", None)[:nd] if nd == 5 \
+                else ("batch", None, "kv_heads", None)
+        if name == "ssd":
+            return ("layers", "batch", "ssm_heads", None, None)
+        if name in ("conv_x",):
+            return ("layers", "batch", None, "heads")
+        if name in ("conv_B", "conv_C"):
+            return ("layers", "batch", None, None)
+        if name == "h":
+            return ("layers", "batch", "lru_dim")
+        if name == "conv":
+            return ("layers", "batch", None, "lru_dim")
+        if name == "c_kv":
+            return ("layers", "batch", None, "kv_lora")
+        if name == "k_rope":
+            return ("layers", "batch", None, None)
+        return ("batch",) + (None,) * (nd - 1)
+
+    spec = cache_spec(cfg, 2, 8)  # shapes irrelevant; structure + ndim only
+    return jax.tree_util.tree_map_with_path(one, spec)

@@ -1,0 +1,151 @@
+"""Shared building blocks: typed param declarations (value + logical axes),
+norms, RoPE, activations, initializers.
+
+Parameters are declared through :class:`P`, carrying both the init spec and
+the *logical sharding axes* of each dimension.  ``build`` materializes a
+params pytree; ``axes_of`` produces the parallel logical-axes pytree that
+``sharding.rules`` consumes.  Keeping both in one declaration prevents
+drift between init code and sharding annotations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+DType = jnp.dtype
+
+
+def dtype_of(name: str) -> DType:
+    return jnp.dtype({"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                      "float16": jnp.float16}[name])
+
+
+# ---------------------------------------------------------------------------
+# Param declaration
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """A parameter declaration: shape, per-dim logical axes, initializer."""
+
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | uniform_scaled | custom
+    scale: float | None = None    # stddev override for "normal"
+    fn: Callable | None = None    # custom init fn(key, shape, dtype)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+    def materialize(self, key, dtype: DType):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "custom":
+            return self.fn(key, self.shape, dtype)
+        if self.init == "uniform_scaled":
+            # lecun-uniform on fan-in (first contracted dim)
+            fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[0]
+            bound = math.sqrt(3.0 / fan_in)
+            return jax.random.uniform(key, self.shape, dtype, -bound, bound)
+        std = self.scale
+        if std is None:
+            fan_in = self.shape[0] if len(self.shape) > 1 else self.shape[0]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dtype)
+
+
+def build(decls, key, dtype: DType):
+    """Materialize a pytree of P declarations into arrays."""
+    leaves, treedef = jax.tree.flatten(decls, is_leaf=lambda x: isinstance(x, P))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def axes_of(decls):
+    """The parallel pytree of logical-axes tuples."""
+    return jax.tree.map(lambda d: d.logical, decls,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def stack_decls(decls, n: int, axis_name: str = "layers"):
+    """Lift a per-layer declaration tree to an n-layer stacked tree (for
+    scan-over-layers): prepend a ``layers`` dim to every leaf."""
+
+    def lift(d: P) -> P:
+        return P((n,) + d.shape, (axis_name,) + d.logical, d.init, d.scale, d.fn)
+
+    return jax.tree.map(lift, decls, is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, scale, bias, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def norm_decl(cfg, width: int | None = None):
+    d = width or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": P((d,), (None,), "ones"), "bias": P((d,), (None,), "zeros")}
+    return {"scale": P((d,), (None,), "zeros")}  # rmsnorm stores (scale-1)
+
+
+def apply_norm(params, x, cfg):
+    if cfg.norm == "layernorm":
+        return layer_norm(x, params["scale"], params["bias"], cfg.norm_eps)
+    return rms_norm(x, params["scale"], cfg.norm_eps)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return inv  # (head_dim//2,)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd) or (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    if x.ndim == positions.ndim + 2:  # head axis present
+        sin, cos = sin[..., None, :], cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(x / cap) * cap
+    return x

@@ -1,0 +1,23 @@
+"""Gated-MLP (SwiGLU / GeGLU) feed-forward blocks."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.common import P, activation
+
+
+def mlp_decls(cfg, d_ff: int | None = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    return {
+        "w_gate": P((d, f), ("embed", "ffn")),
+        "w_up": P((d, f), ("embed", "ffn")),
+        "w_down": P((f, d), ("ffn", "embed")),
+    }
+
+
+def mlp_forward(params, x, cfg):
+    act = activation(cfg.act)
+    g = act(jnp.einsum("bsd,df->bsf", x, params["w_gate"]))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    return jnp.einsum("bsf,fd->bsd", g * u, params["w_down"])

@@ -1,0 +1,122 @@
+"""Top-level model API: init / forward / loss / decode for every assigned
+architecture, dispatched from the ModelConfig.
+
+Batch conventions
+-----------------
+text / vlm:  {"tokens": (B,S) i32, "targets": (B,S) i32}
+audio:       {"src_embeds": (B, S//downsample, d) frame embeddings (stubbed
+              frontend), "tokens": (B,S), "targets": (B,S)}
+decode:      tokens (B,1), cache pytree from ``repro.models.cache``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tfm
+from repro.models.cache import cache_spec, init_cache  # re-export
+from repro.models.common import (P, apply_norm, axes_of, build, dtype_of,
+                                 norm_decl, softcap)
+
+__all__ = ["model_decls", "init_params", "param_logical_axes", "forward",
+           "loss_fn", "decode_step", "init_cache", "cache_spec"]
+
+
+def model_decls(cfg):
+    d, V = cfg.d_model, cfg.vocab_size
+    decls = {
+        "embed": P((V, d), ("vocab", "embed_alt"), scale=0.02),
+        "final_norm": norm_decl(cfg),
+        **tfm.stack_decls_for(cfg),
+    }
+    if not cfg.tie_embeddings:
+        decls["unembed"] = P((d, V), ("embed_alt", "vocab"), scale=0.02)
+    return decls
+
+
+def init_params(cfg, key):
+    return build(model_decls(cfg), key, dtype_of(cfg.param_dtype))
+
+
+def param_logical_axes(cfg):
+    return axes_of(model_decls(cfg))
+
+
+def param_shapes(cfg):
+    """Param ShapeDtypeStructs without allocation (for dry-runs)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens]
+    return x.astype(dtype_of(cfg.compute_dtype))
+
+
+def _logits(params, x, cfg):
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    out_dt = dtype_of(cfg.logits_dtype)
+    return softcap(logits.astype(out_dt), cfg.logit_softcap)
+
+
+def forward(params, batch, cfg, *, use_flash=False, use_ssm_kernel=False):
+    """Full-sequence forward -> (logits (B,S,V) f32, aux_loss)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = _embed(params, tokens, cfg)
+
+    enc_out = None
+    if cfg.arch_type == "audio":
+        src = batch["src_embeds"].astype(x.dtype)
+        src_pos = jnp.broadcast_to(
+            jnp.arange(src.shape[1], dtype=jnp.int32), (B, src.shape[1]))
+        enc_out = tfm.encoder_forward(params, src, cfg, src_pos)
+
+    x, aux = tfm.backbone_forward(params, x, cfg, positions, enc_out=enc_out,
+                                  use_flash=use_flash,
+                                  use_ssm_kernel=use_ssm_kernel)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _logits(params, x, cfg), aux
+
+
+def loss_fn(params, batch, cfg, **kw):
+    """Mean next-token cross-entropy (+ router aux) -> (loss, metrics)."""
+    logits, aux = forward(params, batch, cfg, **kw)
+    targets = batch["targets"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    ce = jnp.mean(nll)
+    loss = ce + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "aux": aux, "loss": loss}
+
+
+def decode_step(params, cache, tokens, index, cfg):
+    """One decode step.  tokens: (B,1) the token at position ``index``.
+    Returns (logits (B,1,V), new_cache)."""
+    x = _embed(params, tokens, cfg)
+    x, new_cache = tfm.backbone_decode(params, x, cfg, cache, index)
+    x = apply_norm(params["final_norm"], x, cfg)
+    return _logits(params, x, cfg), new_cache
+
+
+def prefill_audio_cache(params, cache, src_embeds, cfg):
+    """Audio serve: run the encoder once, fill the cross K/V cache."""
+    B = src_embeds.shape[0]
+    pos = jnp.broadcast_to(
+        jnp.arange(src_embeds.shape[1], dtype=jnp.int32),
+        (B, src_embeds.shape[1]))
+    enc_out = tfm.encoder_forward(params, src_embeds.astype(
+        dtype_of(cfg.compute_dtype)), cfg, pos)
+
+    def per_layer(pl):
+        k = jnp.einsum("btd,dhk->bthk", enc_out, pl["cross"]["wk"])
+        v = jnp.einsum("btd,dhk->bthk", enc_out, pl["cross"]["wv"])
+        return k.astype(cache["cross"]["k"].dtype), v.astype(
+            cache["cross"]["v"].dtype)
+
+    k, v = jax.vmap(per_layer)(params["decoder"])
+    return {**cache, "cross": {"k": k, "v": v}}

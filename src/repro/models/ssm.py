@@ -1,0 +1,209 @@
+"""Mamba-2 SSD (state-space duality) block, pure-JAX reference path.
+
+TPU adaptation (vs. the paper's CUDA kernels): the SSD *chunked* form is
+kept — intra-chunk work is dense (cl x cl) and (cl x N) matmuls that map
+onto the MXU, and the inter-chunk recurrence is a short ``lax.scan`` over
+S/chunk steps.  The fused in_proj+conv of the CUDA release is split into
+separate einsums here (XLA fuses them; separate projections also shard
+cleanly under tensor parallelism).  The Pallas kernel in
+``repro.kernels.ssd_scan`` implements the same chunked form with explicit
+VMEM tiling; this module is its oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, rms_norm
+
+
+def ssm_decls(cfg):
+    d = cfg.d_model
+    di = cfg.d_inner
+    H = cfg.ssm_heads
+    G, N, W = cfg.ssm_n_groups, cfg.ssm_state, cfg.conv_width
+    return {
+        "w_z": P((d, di), ("embed", "heads")),
+        "w_x": P((d, di), ("embed", "heads")),
+        "w_B": P((d, G * N), ("embed", None)),
+        "w_C": P((d, G * N), ("embed", None)),
+        "w_dt": P((d, H), ("embed", "ssm_heads")),
+        "dt_bias": P((H,), ("ssm_heads",), "zeros"),
+        "A_log": P((H,), ("ssm_heads",), "custom",
+                   fn=lambda k, s, dt: jnp.log(
+                       jax.random.uniform(k, s, jnp.float32, 1.0, 16.0)).astype(dt)),
+        "D": P((H,), ("ssm_heads",), "ones"),
+        "conv_x": P((W, di), (None, "heads"), scale=0.2),
+        "conv_B": P((W, G * N), (None, None), scale=0.2),
+        "conv_C": P((W, G * N), (None, None), scale=0.2),
+        "gate_norm": {"scale": P((di,), (None,), "zeros")},
+        "w_out": P((di, d), ("heads", "embed")),
+    }
+
+
+def causal_conv1d(x, w):
+    """x: (B,S,C), w: (W,C) depthwise causal conv (no bias)."""
+    W = w.shape[0]
+    S = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + S, :] * w[i] for i in range(W))
+    return out
+
+
+def conv_step(x_new, conv_state, w):
+    """x_new: (B,C); conv_state: (B,W-1,C) of previous inputs (oldest first).
+    Returns (y (B,C), new_state)."""
+    full = jnp.concatenate([conv_state, x_new[:, None, :]], axis=1)  # (B,W,C)
+    y = jnp.einsum("bwc,wc->bc", full, w)
+    return y, full[:, 1:, :]
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int):
+    """SSD chunked scan, oracle form.
+
+    x:  (B,S,H,P)   inputs (already conv'd + activated)
+    dt: (B,S,H)     post-softplus step sizes
+    A:  (H,)        negative decay rates
+    Bm/Cm: (B,S,G,N)
+    Returns y: (B,S,H,P) and final state (B,H,N,P).
+    """
+    Bsz, S, H, P_ = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    S_orig = S
+    if S % chunk:
+        # zero-pad the tail: dt=0 there makes both decay (exp(0)=1) and the
+        # injected input (dt*x=0) inert for causal outputs before the pad.
+        pad = chunk - S % chunk
+        padfn = lambda a: jnp.pad(a, [(0, 0), (0, pad)] +
+                                  [(0, 0)] * (a.ndim - 2))
+        x, dt, Bm, Cm = padfn(x), padfn(dt), padfn(Bm), padfn(Cm)
+        S = S + pad
+    nc = S // chunk
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    f32 = jnp.float32
+    xc = x.reshape(Bsz, nc, chunk, H, P_)
+    dtc = dt.reshape(Bsz, nc, chunk, H).astype(f32)
+    Bc = Bh.reshape(Bsz, nc, chunk, H, N)
+    Cc = Ch.reshape(Bsz, nc, chunk, H, N)
+
+    dA = dtc * A.astype(f32)                      # (B,nc,cl,H), negative
+    cum = jnp.cumsum(dA, axis=2)                  # inclusive cumsum
+    xdt = (xc.astype(f32) * dtc[..., None]).astype(x.dtype)
+
+    # --- intra-chunk (quadratic within chunk, MXU-friendly) ---
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    # mask BEFORE exp: the i<j entries have positive diff that can overflow
+    # to inf, and inf*0 in the backward pass poisons gradients with NaNs
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    L = jnp.exp(diff)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cc, Bc,
+                        preferred_element_type=f32)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", (scores * L).astype(x.dtype), xdt)
+
+    # --- chunk summary states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,cl,H)
+    S_chunk = jnp.einsum("bcjhn,bcjhp->bchnp",
+                         (Bc.astype(f32) * decay_to_end[..., None]).astype(x.dtype),
+                         xdt)                              # (B,nc,H,N,P)
+
+    # --- inter-chunk recurrence (scan over nc) ---
+    total = jnp.exp(cum[:, :, -1, :])                      # (B,nc,H)
+
+    def step(state, inp):
+        s_c, tot = inp                                     # (B,H,N,P), (B,H)
+        out = state
+        new = state * tot[:, :, None, None].astype(state.dtype) + s_c.astype(state.dtype)
+        return new, out
+
+    init = jnp.zeros((Bsz, H, N, P_), f32)
+    final_state, state_before = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(S_chunk, 1, 0).astype(f32), jnp.moveaxis(total, 1, 0)))
+    state_before = jnp.moveaxis(state_before, 0, 1)        # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcihn,bchnp->bcihp",
+                         (Cc.astype(f32) * jnp.exp(cum)[..., None]).astype(x.dtype),
+                         state_before.astype(x.dtype))
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P_)
+    return y[:, :S_orig], final_state
+
+
+def ssm_forward(params, x, cfg, use_kernel: bool = False):
+    """Full-sequence Mamba-2 block. x: (B,S,d) -> (B,S,d)."""
+    B, S, d = x.shape
+    H, P_, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_n_groups, cfg.ssm_state
+
+    z = jnp.einsum("bsd,de->bse", x, params["w_z"])
+    xin = jnp.einsum("bsd,de->bse", x, params["w_x"])
+    Bm = jnp.einsum("bsd,de->bse", x, params["w_B"])
+    Cm = jnp.einsum("bsd,de->bse", x, params["w_C"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, params["w_dt"])
+
+    xin = jax.nn.silu(causal_conv1d(xin, params["conv_x"]))
+    Bm = jax.nn.silu(causal_conv1d(Bm, params["conv_B"]))
+    Cm = jax.nn.silu(causal_conv1d(Cm, params["conv_C"]))
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(B, S, H, P_)
+    Bh = Bm.reshape(B, S, G, N)
+    Ch = Cm.reshape(B, S, G, N)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.ssd_scan(xh, dt, A, Bh, Ch, chunk=cfg.chunk_size)
+    else:
+        y, _ = ssd_chunked(xh, dt, A, Bh, Ch, cfg.chunk_size)
+    y = y + xh * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(B, S, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"]["scale"], cfg.norm_eps)
+    return jnp.einsum("bse,ed->bsd", y, params["w_out"])
+
+
+def ssm_decode(params, x, cfg, state):
+    """One-step decode.  x: (B,1,d);
+    state = {"ssd": (B,H,N,P), "conv_x": (B,W-1,di), "conv_B": ..., "conv_C": ...}.
+    """
+    B = x.shape[0]
+    H, P_, G, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_n_groups, cfg.ssm_state
+    xt = x[:, 0, :]
+
+    z = xt @ params["w_z"]
+    xin = xt @ params["w_x"]
+    Bm = xt @ params["w_B"]
+    Cm = xt @ params["w_C"]
+    dt_raw = xt @ params["w_dt"]
+
+    xin, conv_x = conv_step(xin, state["conv_x"], params["conv_x"])
+    Bm, conv_B = conv_step(Bm, state["conv_B"], params["conv_B"])
+    Cm, conv_C = conv_step(Cm, state["conv_C"], params["conv_C"])
+    xin, Bm, Cm = jax.nn.silu(xin), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                   # (B,H)
+
+    xh = xin.reshape(B, H, P_)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1)      # (B,H,N)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1)
+
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh.astype(jnp.float32),
+                     xh.astype(jnp.float32) * dt[..., None])
+    ssd = state["ssd"] * dA[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), ssd)
+    y = y.astype(x.dtype) + xh * params["D"].astype(x.dtype)[None, :, None]
+    y = y.reshape(B, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 params["gate_norm"]["scale"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    return out[:, None, :], {"ssd": ssd, "conv_x": conv_x,
+                             "conv_B": conv_B, "conv_C": conv_C}

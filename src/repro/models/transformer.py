@@ -1,0 +1,459 @@
+"""Layer assembly: decoder-only LM stacks (dense / MoE / MLA / SSM /
+hybrid) and the encoder-decoder stack, all scan-over-layers so HLO size is
+O(1) in depth (80-layer qwen2 compiles for 512 partitions on one CPU core).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mlp as mlp_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import P, apply_norm, norm_decl, stack_decls
+
+
+# ---------------------------------------------------------------------------
+# Per-layer declarations
+# ---------------------------------------------------------------------------
+
+def dense_layer_decls(cfg, d_ff=None):
+    return {
+        "norm1": norm_decl(cfg),
+        "attn": attn.attn_decls(cfg),
+        "norm2": norm_decl(cfg),
+        "mlp": mlp_mod.mlp_decls(cfg, d_ff),
+    }
+
+
+def moe_layer_decls(cfg):
+    return {
+        "norm1": norm_decl(cfg),
+        "attn": attn.attn_decls(cfg),
+        "norm2": norm_decl(cfg),
+        "moe": moe_mod.moe_decls(cfg),
+    }
+
+
+def ssm_layer_decls(cfg):
+    return {"norm": norm_decl(cfg), "ssm": ssm_mod.ssm_decls(cfg)}
+
+
+def rec_layer_decls(cfg):
+    return {
+        "norm1": norm_decl(cfg),
+        "rec": rglru_mod.rglru_decls(cfg),
+        "norm2": norm_decl(cfg),
+        "mlp": mlp_mod.mlp_decls(cfg),
+    }
+
+
+def enc_layer_decls(cfg):
+    return dense_layer_decls(cfg)
+
+
+def dec_layer_decls(cfg):
+    d = dense_layer_decls(cfg)
+    d["norm_cross"] = norm_decl(cfg)
+    d["cross"] = attn.cross_attn_decls(cfg)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Per-layer forward (full sequence)
+# ---------------------------------------------------------------------------
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "offloadable-dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return fn
+
+
+def _seq_shard(x, cfg):
+    """Megatron-style sequence parallelism: pin the residual stream's seq
+    dim to the model axis.  GSPMD then materializes the full sequence only
+    inside attention/MLP (all-gather) and reduce-scatters the outputs —
+    replacing the 2x-bytes per-layer all-reduce of plain TP."""
+    if not cfg.seq_shard:
+        return x
+    from jax.sharding import PartitionSpec as PS
+    return jax.lax.with_sharding_constraint(x, PS(None, "model", None))
+
+
+def dense_layer_fwd(p, x, cfg, positions, *, causal=True, window=0,
+                    use_flash=False):
+    h = attn.attn_forward(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                          positions=positions, causal=causal, window=window,
+                          use_flash=use_flash)
+    x = _seq_shard(x + h, cfg)
+    h = mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return _seq_shard(x + h, cfg), jnp.zeros((), jnp.float32)
+
+
+def mla_layer_fwd(p, x, cfg, positions):
+    h = attn.mla_forward(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                         positions=positions)
+    x = x + h
+    if "moe" in p:
+        h, aux = moe_mod.moe_forward(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+    else:
+        h, aux = mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg),
+                                     cfg), jnp.zeros((), jnp.float32)
+    return x + h, aux
+
+
+def moe_layer_fwd(p, x, cfg, positions):
+    if cfg.use_mla:
+        return mla_layer_fwd(p, x, cfg, positions)
+    h = attn.attn_forward(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                          positions=positions)
+    x = x + h
+    h, aux = moe_mod.moe_forward(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, aux
+
+
+def ssm_layer_fwd(p, x, cfg, use_kernel=False):
+    h = ssm_mod.ssm_forward(p["ssm"], apply_norm(p["norm"], x, cfg), cfg,
+                            use_kernel=use_kernel)
+    return x + h, jnp.zeros((), jnp.float32)
+
+
+def rec_layer_fwd(p, x, cfg):
+    h = rglru_mod.rglru_block_forward(p["rec"], apply_norm(p["norm1"], x, cfg), cfg)
+    x = x + h
+    h = mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, jnp.zeros((), jnp.float32)
+
+
+def dec_layer_fwd(p, x, enc_out, cfg, positions):
+    h = attn.attn_forward(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                          positions=positions, causal=True)
+    x = x + h
+    h = attn.cross_attn_forward(p["cross"], apply_norm(p["norm_cross"], x, cfg),
+                                enc_out, cfg)
+    x = x + h
+    h = mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Scan helpers
+# ---------------------------------------------------------------------------
+
+def scan_stack(layer_fn, stacked_params, x, cfg):
+    """Apply ``layer_fn(params_l, x) -> (x, aux)`` over a stacked param tree.
+
+    ``cfg.scan_layers=False`` unrolls the stack instead (bigger HLO, but
+    XLA's cost_analysis then counts every layer — the dry-run's roofline
+    mode; scan mode is the fast compile-proof mode)."""
+    fn = _maybe_remat(lambda p, x: layer_fn(p, x), cfg)
+
+    if not cfg.scan_layers:
+        L = jax.tree.leaves(stacked_params)[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], stacked_params)
+            x, a = fn(lp, x)
+            aux = aux + a
+        return x, aux
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = fn(lp, x)
+        return (x, aux + a), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               stacked_params)
+    return x, aux
+
+
+def scan_stack_cache(layer_fn, stacked_params, x, cache, cfg):
+    """Decode scan: layer_fn(params_l, x, cache_l) -> (x, new_cache_l)."""
+    if not cfg.scan_layers:
+        L = jax.tree.leaves(stacked_params)[0].shape[0]
+        outs = []
+        for i in range(L):
+            lp = jax.tree.map(lambda a: a[i], stacked_params)
+            lc = jax.tree.map(lambda a: a[i], cache)
+            x, nc = layer_fn(lp, x, lc)
+            outs.append(nc)
+        new_cache = jax.tree.map(lambda *ls: jnp.stack(ls, axis=0), *outs)
+        return x, new_cache
+
+    def body(carry, inp):
+        lp, lc = inp
+        x = carry
+        x, nc = layer_fn(lp, x, lc)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(body, x, (stacked_params, cache))
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full-stack declarations + forward per family
+# ---------------------------------------------------------------------------
+
+def stack_decls_for(cfg):
+    """Stacked layer declarations for the whole backbone."""
+    at = cfg.arch_type
+    if at == "ssm":
+        return {"layers": stack_decls(ssm_layer_decls(cfg), cfg.num_layers)}
+    if at == "hybrid":
+        period = len(cfg.block_pattern)
+        G = cfg.num_layers // period
+        tail = cfg.num_layers - G * period
+        group = {}
+        n_rec = sum(1 for b in cfg.block_pattern if b == "recurrent")
+        assert cfg.block_pattern == ("recurrent",) * n_rec + ("attention",) * (period - n_rec) \
+            or True  # order handled in fwd via pattern
+        for i, kind in enumerate(cfg.block_pattern):
+            group[f"sub{i}"] = rec_layer_decls(cfg) if kind == "recurrent" \
+                else dense_layer_decls(cfg)
+        decls = {"groups": stack_decls(group, G)}
+        if tail:
+            decls["tail"] = stack_decls(rec_layer_decls(cfg), tail)
+        return decls
+    if at == "moe":
+        decls = {}
+        nd = cfg.first_dense_layers
+        if nd:
+            import dataclasses
+            dense_cfg_ff = cfg.first_dense_d_ff or cfg.d_ff
+            dense_decl = moe_layer_decls(cfg) | {}
+            dense_decl = {
+                "norm1": norm_decl(cfg),
+                "attn": attn.attn_decls(cfg),
+                "norm2": norm_decl(cfg),
+                "mlp": mlp_mod.mlp_decls(cfg, dense_cfg_ff),
+            }
+            decls["dense_layers"] = stack_decls(dense_decl, nd)
+        decls["layers"] = stack_decls(moe_layer_decls(cfg), cfg.num_layers - nd)
+        return decls
+    if at == "audio":
+        return {
+            "encoder": stack_decls(enc_layer_decls(cfg), cfg.num_encoder_layers),
+            "enc_norm": norm_decl(cfg),
+            "decoder": stack_decls(dec_layer_decls(cfg), cfg.num_layers),
+        }
+    # dense / vlm
+    return {"layers": stack_decls(dense_layer_decls(cfg), cfg.num_layers)}
+
+
+def backbone_forward(params, x, cfg, positions, *, enc_out=None,
+                     use_flash=False, use_ssm_kernel=False):
+    """x: (B,S,d) embedded inputs -> (hidden (B,S,d), aux_loss)."""
+    at = cfg.arch_type
+    zero = jnp.zeros((), jnp.float32)
+
+    if at == "ssm":
+        return scan_stack(
+            lambda p, h: ssm_layer_fwd(p, h, cfg, use_kernel=use_ssm_kernel),
+            params["layers"], x, cfg)
+
+    if at == "hybrid":
+        def group_fwd(gp, h):
+            aux = zero
+            for i, kind in enumerate(cfg.block_pattern):
+                sub = gp[f"sub{i}"]
+                if kind == "recurrent":
+                    h, a = rec_layer_fwd(sub, h, cfg)
+                else:
+                    h, a = dense_layer_fwd(sub, h, cfg, positions,
+                                           window=cfg.window,
+                                           use_flash=use_flash)
+                aux = aux + a
+            return h, aux
+
+        x, aux = scan_stack(group_fwd, params["groups"], x, cfg)
+        if "tail" in params:
+            x, a2 = scan_stack(lambda p, h: rec_layer_fwd(p, h, cfg),
+                               params["tail"], x, cfg)
+            aux = aux + a2
+        return x, aux
+
+    if at == "moe":
+        aux = zero
+        if "dense_layers" in params:
+            x, a = scan_stack(
+                lambda p, h: (mla_layer_fwd(p, h, cfg, positions)
+                              if cfg.use_mla else
+                              dense_layer_fwd(p, h, cfg, positions)),
+                params["dense_layers"], x, cfg)
+            aux = aux + a
+        x, a = scan_stack(lambda p, h: moe_layer_fwd(p, h, cfg, positions),
+                          params["layers"], x, cfg)
+        return x, aux + a
+
+    if at == "audio":
+        assert enc_out is not None
+        x, aux = scan_stack(
+            lambda p, h: dec_layer_fwd(p, h, enc_out, cfg, positions),
+            params["decoder"], x, cfg)
+        return x, aux
+
+    # dense / vlm
+    return scan_stack(
+        lambda p, h: dense_layer_fwd(p, h, cfg, positions, window=cfg.window,
+                                     use_flash=use_flash),
+        params["layers"], x, cfg)
+
+
+def encoder_forward(params, src, cfg, positions):
+    """Bidirectional encoder over frame embeddings. src: (B,S_src,d)."""
+    x, _ = scan_stack(
+        lambda p, h: dense_layer_fwd(p, h, cfg, positions, causal=False),
+        params["encoder"], src, cfg)
+    return apply_norm(params["enc_norm"], x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token) per family
+# ---------------------------------------------------------------------------
+
+def dense_layer_decode(p, x, cfg, cache_l, index, window):
+    h, nc = attn.attn_decode(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                             cache_l, index, window=window)
+    x = x + h
+    x = x + mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x, nc
+
+
+def mla_layer_decode(p, x, cfg, cache_l, index):
+    h, nc = attn.mla_decode(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                            cache_l, index)
+    x = x + h
+    if "moe" in p:
+        h, _ = moe_mod.moe_forward(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+    else:
+        h = mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, nc
+
+
+def moe_layer_decode(p, x, cfg, cache_l, index):
+    if cfg.use_mla:
+        return mla_layer_decode(p, x, cfg, cache_l, index)
+    h, nc = attn.attn_decode(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                             cache_l, index, window=0)
+    x = x + h
+    h, _ = moe_mod.moe_forward(p["moe"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x + h, nc
+
+
+def ssm_layer_decode(p, x, cfg, cache_l):
+    h, nc = ssm_mod.ssm_decode(p["ssm"], apply_norm(p["norm"], x, cfg), cfg,
+                               cache_l)
+    return x + h, nc
+
+
+def rec_layer_decode(p, x, cfg, cache_l):
+    h, nc = rglru_mod.rglru_block_decode(
+        p["rec"], apply_norm(p["norm1"], x, cfg), cfg, cache_l)
+    x = x + h
+    x = x + mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x, nc
+
+
+def dec_layer_decode(p, x, cfg, cache_l, index):
+    h, nc = attn.attn_decode(p["attn"], apply_norm(p["norm1"], x, cfg), cfg,
+                             {"k": cache_l["self"]["k"], "v": cache_l["self"]["v"]},
+                             index, window=0)
+    x = x + h
+    # cross-attention against precomputed (cached) encoder K/V
+    q = jnp.einsum("bsd,dhk->bshk", apply_norm(p["norm_cross"], x, cfg),
+                   p["cross"]["wq"])
+    k, v = cache_l["cross"]["k"], cache_l["cross"]["v"]
+    mask = jnp.ones((1, 1, 1, 1, k.shape[1]), bool)
+    import math
+    out = attn.sdpa(q, k, v, mask, 1.0 / math.sqrt(cfg.head_dim))
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["cross"]["wo"])
+    x = x + mlp_mod.mlp_forward(p["mlp"], apply_norm(p["norm2"], x, cfg), cfg)
+    return x, {"self": nc, "cross": cache_l["cross"]}
+
+
+def backbone_decode(params, x, cfg, cache, index):
+    """x: (B,1,d) -> (hidden (B,1,d), new_cache)."""
+    at = cfg.arch_type
+
+    if at == "ssm":
+        return scan_stack_cache(
+            lambda p, h, c: ssm_layer_decode(p, h, cfg, c),
+            params["layers"], x, cache, cfg)
+
+    if at == "hybrid":
+        def group_dec(gp, h, gc):
+            ncs = {}
+            rec_i = 0
+            for i, kind in enumerate(cfg.block_pattern):
+                sub = gp[f"sub{i}"]
+                if kind == "recurrent":
+                    key = "rec1" if rec_i == 0 else "rec2"
+                    h, nc = rec_layer_decode(sub, h, cfg, gc[key])
+                    ncs[key] = nc
+                    rec_i += 1
+                else:
+                    h, nc = dense_layer_decode(sub, h, cfg, gc["attn"], index,
+                                               cfg.window)
+                    ncs["attn"] = nc
+            return h, ncs
+
+        x, new_groups = scan_stack_cache(group_dec, params["groups"], x,
+                                         cache["groups"], cfg)
+        new_cache = {"groups": new_groups}
+        if "tail" in params:
+            x, new_tail = scan_stack_cache(
+                lambda p, h, c: rec_layer_decode(p, h, cfg, c),
+                params["tail"], x, cache["tail"], cfg)
+            new_cache["tail"] = new_tail
+        return x, new_cache
+
+    if at == "moe":
+        nd = cfg.first_dense_layers
+        new_cache = {}
+        if cfg.use_mla:
+            split = lambda c, a, b: jax.tree.map(lambda l: l[a:b], c)
+            if nd:
+                x, nc_d = scan_stack_cache(
+                    lambda p, h, c: mla_layer_decode(p, h, cfg, c, index),
+                    params["dense_layers"], x, split(cache, 0, nd), cfg)
+            x, nc_m = scan_stack_cache(
+                lambda p, h, c: mla_layer_decode(p, h, cfg, c, index),
+                params["layers"], x, split(cache, nd, cfg.num_layers), cfg)
+            if nd:
+                new_cache = jax.tree.map(
+                    lambda a, b: jnp.concatenate([a, b], axis=0), nc_d, nc_m)
+            else:
+                new_cache = nc_m
+            return x, new_cache
+        split = lambda c, a, b: jax.tree.map(lambda l: l[a:b], c)
+        if nd:
+            x, nc_d = scan_stack_cache(
+                lambda p, h, c: dense_layer_decode(p, h, cfg, c, index, 0),
+                params["dense_layers"], x, split(cache, 0, nd), cfg)
+        x, nc_m = scan_stack_cache(
+            lambda p, h, c: moe_layer_decode(p, h, cfg, c, index),
+            params["layers"], x, split(cache, nd, cfg.num_layers), cfg)
+        if nd:
+            new_cache = jax.tree.map(
+                lambda a, b: jnp.concatenate([a, b], axis=0), nc_d, nc_m)
+        else:
+            new_cache = nc_m
+        return x, new_cache
+
+    if at == "audio":
+        return scan_stack_cache(
+            lambda p, h, c: dec_layer_decode(p, h, cfg, c, index),
+            params["decoder"], x, cache, cfg)
+
+    # dense / vlm
+    return scan_stack_cache(
+        lambda p, h, c: dense_layer_decode(p, h, cfg, c, index, cfg.window),
+        params["layers"], x, cache, cfg)

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import adamw, sgd, apply_updates, global_norm_clip
+from repro.optim.schedule import cosine_schedule, linear_warmup, constant
+
+__all__ = ["adamw", "sgd", "apply_updates", "global_norm_clip",
+           "cosine_schedule", "linear_warmup", "constant"]

@@ -1,0 +1,99 @@
+"""Minimal optax-free optimizers: (init, update) pairs over pytrees.
+
+Optimizer states are kept in float32 regardless of param dtype (mixed
+precision: bf16 params / f32 moments), the standard TPU training recipe.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+
+
+def _f32_like(tree):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def global_norm_clip(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), norm
+
+
+def adamw(lr, *, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0) -> Optimizer:
+    """lr is a float or a schedule fn(step)->float."""
+
+    def init(params):
+        return {"mu": _f32_like(params), "nu": _f32_like(params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * jnp.square(g)
+            u = -lr_t * ((mu / c1) / (jnp.sqrt(nu / c2) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, mu, nu
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_mu = tdef.flatten_up_to(state["mu"])
+        flat_nu = tdef.flatten_up_to(state["nu"])
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p in
+               zip(flat_g, flat_mu, flat_nu, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        new_state = {"mu": tdef.unflatten([o[1] for o in out]),
+                     "nu": tdef.unflatten([o[2] for o in out]),
+                     "step": step}
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def sgd(lr, *, momentum=0.0) -> Optimizer:
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["vel"] = _f32_like(params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        if momentum:
+            vel = jax.tree.map(
+                lambda v, g: momentum * v + g.astype(jnp.float32),
+                state["vel"], grads)
+            updates = jax.tree.map(lambda v: -lr_t * v, vel)
+            return updates, {"step": step, "vel": vel}
+        updates = jax.tree.map(lambda g: -lr_t * g.astype(jnp.float32), grads)
+        return updates, {"step": step}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo,
+    roofline_terms,
+    model_flops,
+    RooflineReport,
+)
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "model_flops",
+           "RooflineReport"]

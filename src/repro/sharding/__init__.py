@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    AxisRules,
+    DEFAULT_RULES,
+    logical_to_spec,
+    param_specs,
+    shard_pytree_specs,
+)
+
+__all__ = [
+    "AxisRules",
+    "DEFAULT_RULES",
+    "logical_to_spec",
+    "param_specs",
+    "shard_pytree_specs",
+]

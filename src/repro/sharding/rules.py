@@ -1,0 +1,169 @@
+"""Logical-axis sharding rules with divisibility fallback.
+
+Every parameter / activation in the framework is annotated with *logical*
+axis names ("embed", "heads", "ffn", "vocab", ...).  A rule table maps each
+logical axis to an ordered list of mesh-axis candidates.  At spec-derivation
+time we walk the candidates and pick the first mesh axis (or tuple of mesh
+axes) that (a) exists in the mesh and (b) divides the dimension size; if
+none qualifies the dimension is replicated.
+
+This is how the framework absorbs awkward dimensions across the 10 assigned
+architectures (yi-34b's 56 heads don't divide a 16-way model axis; mamba2's
+50280-token vocab doesn't either) without per-arch special cases.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+# A candidate is either a single mesh axis name or a tuple of mesh axes that
+# are combined (their sizes multiply) for one tensor dimension.
+Candidate = tuple[str, ...]
+
+
+def _as_candidate(c) -> Candidate:
+    if isinstance(c, str):
+        return (c,)
+    return tuple(c)
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Ordered mapping: logical axis -> candidate mesh axes."""
+
+    rules: Mapping[str, Sequence[Candidate]]
+
+    def candidates(self, logical: str) -> Sequence[Candidate]:
+        return [_as_candidate(c) for c in self.rules.get(logical, ())]
+
+    def with_overrides(self, **overrides) -> "AxisRules":
+        merged = dict(self.rules)
+        for k, v in overrides.items():
+            merged[k] = v
+        return AxisRules(merged)
+
+
+# Default production rules for the (pod, data, model) / (data, model) meshes.
+# Batch-like axes shard over the full data-parallel extent; weight axes over
+# the model (tensor-parallel) axis.  "users" is the paper's federation axis:
+# it is carried by the pod axis when present (one user per pod — the paper's
+# 2-user topology) and otherwise by data-axis subgrouping.
+DEFAULT_RULES = AxisRules(
+    {
+        # activations
+        "batch": [("pod", "data"), ("data",), ("pod",)],
+        "seq": [],  # sequence stays unsharded by default (no CP in baseline)
+        "embed_act": [],  # activation feature dim replicated in baseline
+        # parameters
+        "vocab": [("model",)],
+        "embed": [],  # embedding feature dim; fallback target for vocab
+        "embed_alt": [("model",)],  # used when vocab cannot shard
+        "heads": [("model",)],
+        "kv_heads": [("model",)],
+        "head_dim": [],
+        "qkv": [("model",)],
+        "ffn": [("model",)],
+        "experts": [("model",)],
+        "expert_ffn": [],
+        "ssm_heads": [("model",)],
+        "ssm_state": [],
+        "conv_dim": [("model",)],
+        "lru_dim": [("model",)],
+        "kv_lora": [],
+        "layers": [],  # scan-stacked layer axis never shards
+        "users": [("pod",), ("data",)],
+    }
+)
+
+
+# Pure data parallelism: batch over every mesh axis, weights replicated.
+# Right call for small models (<~2B) where TP activation all-reduces dwarf
+# the (tiny) DP gradient all-reduce — see EXPERIMENTS.md §Perf pair C.
+DP_ONLY_RULES = AxisRules(
+    {
+        "batch": [("pod", "data", "model"), ("data", "model"), ("data",)],
+        "users": [("pod",), ("data",)],
+    }
+)
+
+# FSDP / ZeRO-3: batch over every axis; each weight sharded 256-way on its
+# first divisible dim (GSPMD all-gathers weights at use, reduce-scatters
+# grads) — trades the per-layer activation all-reduce of TP for a (much
+# smaller, at large batch-per-chip) weight all-gather.
+_FSDP_W = [("data", "model"), ("model",), ("data",)]
+FSDP_RULES = AxisRules(
+    {
+        "batch": [("pod", "data", "model"), ("data", "model"), ("data",)],
+        "vocab": _FSDP_W,
+        "embed": _FSDP_W,
+        "embed_alt": _FSDP_W,
+        "heads": _FSDP_W,
+        "kv_heads": _FSDP_W,
+        "ffn": _FSDP_W,
+        "experts": _FSDP_W,
+        "expert_ffn": _FSDP_W,
+        "ssm_heads": _FSDP_W,
+        "conv_dim": _FSDP_W,
+        "lru_dim": _FSDP_W,
+        "kv_lora": _FSDP_W,
+        "users": [("pod",), ("data",)],
+    }
+)
+
+NAMED_RULES = {"default": DEFAULT_RULES, "dp_only": DP_ONLY_RULES,
+               "fsdp": FSDP_RULES}
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def logical_to_spec(
+    logical_axes: Sequence[str | None],
+    dim_sizes: Sequence[int],
+    mesh: Mesh,
+    rules: AxisRules = DEFAULT_RULES,
+) -> PartitionSpec:
+    """Derive a PartitionSpec for one tensor.
+
+    ``logical_axes`` has one entry per tensor dimension (None = replicated).
+    A mesh axis is consumed at most once per tensor (GSPMD requirement).
+    """
+    sizes = _mesh_axis_sizes(mesh)
+    used: set[str] = set()
+    spec_entries: list[None | str | tuple[str, ...]] = []
+    for logical, dim in zip(logical_axes, dim_sizes):
+        entry = None
+        if logical is not None:
+            for cand in rules.candidates(logical):
+                if any(a in used or a not in sizes for a in cand):
+                    continue
+                total = 1
+                for a in cand:
+                    total *= sizes[a]
+                if total > 0 and dim % total == 0 and total > 1:
+                    entry = cand[0] if len(cand) == 1 else tuple(cand)
+                    used.update(cand)
+                    break
+        spec_entries.append(entry)
+    return PartitionSpec(*spec_entries)
+
+
+def param_specs(params, logical_tree, mesh: Mesh, rules: AxisRules = DEFAULT_RULES):
+    """Map a pytree of arrays + a matching pytree of logical-axis tuples to
+    a pytree of PartitionSpec."""
+
+    def one(arr, logical):
+        return logical_to_spec(logical, arr.shape, mesh, rules)
+
+    return jax.tree.map(one, params, logical_tree, is_leaf=lambda x: x is None)
+
+
+def shard_pytree_specs(tree, mesh: Mesh, spec_tree):
+    """Pytree of NamedSharding from a pytree of PartitionSpec."""
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, PartitionSpec))

@@ -1,0 +1,176 @@
+"""Substrate tests: optimizers, schedules, checkpointing, sharding rules,
+data pipeline."""
+
+import os
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data.synthetic import TokenStream, synthetic_batch_for
+from repro.optim import adamw, apply_updates, cosine_schedule, global_norm_clip, sgd
+from repro.sharding.rules import DEFAULT_RULES, logical_to_spec
+
+
+# ---------------------------------------------------------------------------
+# optim
+# ---------------------------------------------------------------------------
+
+def test_adamw_minimizes_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_sgd_momentum_minimizes():
+    opt = sgd(0.05, momentum=0.9)
+    params = {"w": jnp.asarray([4.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.abs(params["w"])[0]) < 5e-2
+
+
+def test_optimizer_state_is_f32_for_bf16_params():
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    opt = adamw(1e-3)
+    st_ = opt.init(params)
+    assert st_["mu"]["w"].dtype == jnp.float32
+
+
+def test_global_norm_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}  # norm 5
+    clipped, norm = global_norm_clip(g, 1.0)
+    assert abs(float(norm) - 5.0) < 1e-5
+    cn = float(jnp.linalg.norm(clipped["a"]))
+    assert abs(cn - 1.0) < 1e-5
+
+
+def test_cosine_schedule_shape():
+    s = cosine_schedule(1.0, 10, 100)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1.0) < 1e-6
+    assert float(s(100)) < float(s(50)) < 1.0
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": (jnp.ones((4,), jnp.bfloat16) * 1.5),
+                  "d": jnp.asarray(3, jnp.int32)}}
+    save_checkpoint(str(tmp_path), 7, tree)
+    assert latest_step(str(tmp_path)) == 7
+    out = restore_checkpoint(str(tmp_path), 7, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        restore_checkpoint(str(tmp_path), 1, {"a": jnp.zeros((3,))})
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def _mesh44():
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+@given(st.integers(1, 4096))
+@settings(deadline=None, max_examples=40)
+def test_divisibility_fallback_never_invalid(dim):
+    """For any dim, the derived spec either divides it or replicates."""
+    import os
+    mesh = jax.make_mesh((1,), ("model",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    spec = logical_to_spec(("ffn",), (dim,), mesh)
+    # model axis of size 1 never shards (total==1 -> replicate)
+    assert spec == jax.sharding.PartitionSpec(None)
+
+
+def test_rules_on_production_shapes():
+    """Run the actual derivation on a 16x16 mesh in a subprocess (needs
+    256 host devices) and assert the awkward dims fall back correctly."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+        import jax
+        from jax.sharding import PartitionSpec as PS
+        from repro.sharding.rules import logical_to_spec
+        mesh = jax.make_mesh((16, 16), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        # yi-34b: 56 heads don't divide 16 -> replicated; d_ff 20480 shards
+        assert logical_to_spec(("embed", "heads", None), (7168, 56, 128),
+                               mesh) == PS(None, None, None)
+        assert logical_to_spec(("embed", "ffn"), (7168, 20480),
+                               mesh) == PS(None, "model")
+        # mamba2: vocab 50280 not divisible -> embed_alt picks up model
+        assert logical_to_spec(("vocab", "embed_alt"), (50280, 1536),
+                               mesh) == PS(None, "model")
+        # divisible vocab keeps model on vocab, embed_alt replicates
+        assert logical_to_spec(("vocab", "embed_alt"), (32000, 2048),
+                               mesh) == PS("model", None)
+        # batch over combined (pod,data)
+        mesh3 = jax.make_mesh((2, 16, 16), ("pod", "data", "model"),
+                              axis_types=(jax.sharding.AxisType.Auto,)*3)
+        assert logical_to_spec(("batch", None), (256, 4096),
+                               mesh3) == PS(("pod", "data"), None)
+        # batch=1 (long_500k) replicates
+        assert logical_to_spec(("batch", None), (1, 8192), mesh3) == \\
+            PS(None, None)
+        print("OK")
+    """)
+    r = _run_sub(code)
+    assert "OK" in r.stdout, r.stdout + r.stderr
+
+
+def _run_sub(code):
+    import subprocess, sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run([__import__("sys").executable, "-c", code],
+                          capture_output=True, text=True, env=env)
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+def test_token_stream_deterministic_and_learnable():
+    s1 = TokenStream(100, 16, 4, seed=3)
+    s2 = TokenStream(100, 16, 4, seed=3)
+    b1, b2 = s1.batch(5), s2.batch(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    # targets are next tokens
+    np.testing.assert_array_equal(np.asarray(b1["tokens"][:, 1:]),
+                                  np.asarray(b1["targets"][:, :-1]))
+
+
+def test_synthetic_batch_audio_shape():
+    from repro.configs.base import get_config
+    cfg = get_config("seamless-m4t-medium").reduced()
+    b = synthetic_batch_for(cfg, 3, 32)
+    assert b["src_embeds"].shape == (3, 8, cfg.d_model)

@@ -2,10 +2,15 @@
 roofline table derived from the dry-run artifacts and kernel micro-bench.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's
-headline quantity).  Full experiment narratives live in EXPERIMENTS.md.
+headline quantity) and writes the same results machine-readably to
+``BENCH_distgan.json`` (repo root): flat ``name -> us_per_call`` plus
+``_derived``/``_quick`` side-channels.  Full experiment narratives live
+in EXPERIMENTS.md.
 
-  PYTHONPATH=src python -m benchmarks.run            # all
-  PYTHONPATH=src python -m benchmarks.run paper_time # one
+  PYTHONPATH=src python -m benchmarks.run                    # all
+  PYTHONPATH=src python -m benchmarks.run paper_time         # one
+  PYTHONPATH=src python -m benchmarks.run --quick            # <60s smoke
+  PYTHONPATH=src python -m benchmarks.run paper_time --quick
 """
 
 from __future__ import annotations
@@ -20,11 +25,19 @@ import numpy as np
 
 SEED = 0
 OUT = []
+RESULTS = {}   # name -> us_per_call (written to BENCH_distgan.json)
+DERIVED = {}   # name -> derived string
+QUICK = False  # set by --quick: small configs, <60 s total
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_distgan.json")
 
 
 def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     OUT.append(row)
+    RESULTS[name] = round(float(us_per_call), 1)
+    DERIVED[name] = derived
     print(row, flush=True)
 
 
@@ -46,12 +59,103 @@ def _ring(num_users=2, modes=4, separation=1.0):
 # Paper fig 14/15: training time, distributed vs normal GAN
 # ---------------------------------------------------------------------------
 
+def _fused_vs_per_step(approaches, reps, batch):
+    """Scan-fused engine vs legacy per-step loop on the MLP pair, same
+    body, same shapes (bit-identical trajectories — tests/test_engine.py).
+
+    The per-step side replays exactly what the legacy harness pays every
+    round: per-user device staging, one jit dispatch of the full state
+    pytree, two host syncs for metrics.  The fused side drives the K=16
+    scan-compiled chunk over pre-staged device data with one dispatch and
+    one sync per chunk.  Both are timed as best-of-``reps`` interleaved
+    windows (min is the steady-state estimator — this box is 2 shared
+    cores and the mean is dominated by background load)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.approaches import (DistGANConfig, STEP_FACTORIES,
+                                       init_state)
+    from repro.core.engine import DEFAULT_ROUNDS_PER_JIT, make_engine
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                      d_hidden=16))
+    ds, _ = _ring()
+    K = DEFAULT_ROUNDS_PER_JIT
+    W = 24            # rounds per per-step timing window
+    U = 2
+    rng = np.random.default_rng(SEED)
+    speedups = {}
+    for ap in approaches:
+        fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.5)
+        if ap == "baseline":
+            pool = [ds.union_sampler(rng, batch).astype(np.float32)
+                    for _ in range(K)]
+        else:
+            pool = [np.stack([ds.user_batch(u, rng, batch)
+                              for u in range(U)]).astype(np.float32)
+                    for _ in range(K)]
+        staged = jnp.asarray(np.stack(pool))          # (K, [U,] B, 2)
+
+        def stage_one(j):  # the legacy loop's per-round staging
+            if ap == "baseline":
+                return jnp.asarray(pool[j % K])
+            return jnp.stack([jnp.asarray(pool[j % K][u])
+                              for u in range(U)])
+
+        s_loop = init_state(pair, fcfg, jax.random.key(SEED),
+                            sync_ds=(ap == "approach1"))
+        s_fused = init_state(pair, fcfg, jax.random.key(SEED),
+                             sync_ds=(ap == "approach1"))
+        step_fn = STEP_FACTORIES[ap](pair, fcfg)
+        eng = make_engine(pair, fcfg, ap)
+
+        # compile both programs outside the timed windows
+        s_loop, m = step_fn(s_loop, stage_one(0))
+        jax.block_until_ready(m["g_loss"])
+        s_fused, mf = eng(s_fused, staged)
+        jax.block_until_ready(mf["g_loss"])
+
+        t_loop = t_fused = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            for j in range(W):
+                s_loop, m = step_fn(s_loop, stage_one(j))
+                float(m["g_loss"]); np.asarray(m["d_loss"])
+            t_loop = min(t_loop, (time.perf_counter() - t0) / W)
+
+            t0 = time.perf_counter()
+            s_fused, mf = eng(s_fused, staged)
+            jax.tree.map(np.asarray, mf)              # one sync per chunk
+            t_fused = min(t_fused, (time.perf_counter() - t0) / K)
+
+        sp = t_loop / t_fused
+        speedups[ap] = sp
+        emit(f"paper_time/{ap}_per_step_loop", t_loop * 1e6,
+             "engine=per_step;best_of_windows=1")
+        emit(f"paper_time/{ap}_fused_engine", t_fused * 1e6,
+             f"rounds_per_jit={K};speedup=x{sp:.2f}")
+    worst = min(speedups, key=speedups.get)
+    emit("paper_time/fused_speedup", 0.0,
+         f"min_x{speedups[worst]:.2f}({worst});" +
+         ";".join(f"{a}=x{s:.2f}" for a, s in speedups.items()))
+
+
 def paper_time():
     """Paper §5.5 (figs 14/15): wall-clock to train over N samples,
     distributed (users' local-D phases in parallel) vs the serial union
     baseline.  Components (t_base, t_d) are measured; the D-phase
     parallelism is modeled (one host core here).  Uses the paper-scale
-    784-dim MLP pair so the D update dominates, as in the paper."""
+    784-dim MLP pair so the D update dominates, as in the paper.
+
+    Also reports the harness-level fused-vs-per-step comparison (us per
+    round of the scan-compiled engine vs the legacy jit loop); in
+    ``--quick`` mode only that comparison runs (<60 s)."""
+    _fused_vs_per_step(["approach1", "approach2", "approach3", "baseline"],
+                       reps=6 if QUICK else 10, batch=64)
+    if QUICK:
+        return
+
     from repro.core.approaches import DistGANConfig
     from repro.core.gan import MLPGanConfig, make_mlp_pair
     from repro.core.protocol import (effective_epoch_time,
@@ -78,8 +182,11 @@ def paper_time():
          f"epoch_{N}samples_s={base_epoch:.4f}")
     best = None
     for ap in ["approach1", "approach2", "approach3"]:
-        r = run_distgan(pair, fcfg, ds, ap, steps=40, batch_size=B,
-                        seed=SEED, eval_samples=0)
+        # per-step on purpose: the §5.5 model decomposes ONE round against
+        # per-step-measured t_base/t_d; a fused step time would clamp the
+        # server-overhead term to zero and misattribute the epoch cost
+        r = run_distgan(pair, fcfg, ds, ap, steps=48, batch_size=B,
+                        seed=SEED, eval_samples=0, engine="per_step")
         eff = effective_epoch_time(r, U, ap, t_base=t_base, t_d=t_d,
                                    per_samples=N, batch_size=B)
         best = min(best, eff) if best else eff
@@ -339,8 +446,11 @@ def kernels_micro():
         return (time.perf_counter() - t0) / n * 1e6
 
     x = jax.random.normal(jax.random.key(0), (65536,))
-    us = bench(ops.topk_mask, x, 0.1)
-    emit("kernels/topk_mask_65536", us, "interpret_mode=1")
+    us = bench(lambda a, f: ops.topk_mask(a, f, mode="global"), x, 0.1)
+    emit("kernels/topk_mask_global_65536", us,
+         "interpret_mode=1;exact_fullvector=1")
+    us = bench(lambda a, f: ops.topk_mask(a, f, mode="block"), x, 0.1)
+    emit("kernels/topk_mask_block_65536", us, "interpret_mode=1")
 
     q = jax.random.normal(jax.random.key(1), (1, 256, 4, 64))
     k = jax.random.normal(jax.random.key(2), (1, 256, 2, 64))
@@ -405,12 +515,47 @@ BENCHES = {
     "roofline_table": roofline_table,
 }
 
+# --quick smoke gate (<60 s): the fused-engine comparison + kernel micro
+QUICK_BENCHES = ["paper_time", "kernels_micro"]
+
+
+def write_bench_json(path: str = BENCH_JSON) -> None:
+    """Merge this run's rows into the existing artifact (a subset run —
+    one bench name, or --quick — must not clobber full-run results)."""
+    payload, derived = {}, {}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                payload = json.load(fh)
+            derived = payload.pop("_derived", {})
+            payload.pop("_quick", None)
+        except (json.JSONDecodeError, OSError):
+            payload, derived = {}, {}
+    payload.update(RESULTS)
+    derived.update(DERIVED)
+    payload["_derived"] = derived
+    payload["_quick"] = QUICK
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=1, sort_keys=True)
+        fh.write("\n")
+
 
 def main() -> None:
-    names = sys.argv[1:] or list(BENCHES)
+    global QUICK
+    args = sys.argv[1:]
+    QUICK = "--quick" in args
+    names = [a for a in args if not a.startswith("--")]
+    if not names:
+        names = QUICK_BENCHES if QUICK else list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        sys.exit(f"unknown benchmark(s) {unknown}; "
+                 f"choose from: {', '.join(BENCHES)}")
     print("name,us_per_call,derived")
     for n in names:
         BENCHES[n]()
+    write_bench_json()
+    print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

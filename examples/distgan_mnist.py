@@ -40,6 +40,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=1500)
     ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--engine", choices=["fused", "per_step"],
+                    default="fused",
+                    help="fused = scan-compiled K-round engine (default); "
+                         "per_step = legacy one-jit-call-per-round loop")
+    ap.add_argument("--rounds-per-jit", type=int, default=16)
     args = ap.parse_args()
 
     ds, templates = build_dataset()
@@ -60,7 +65,9 @@ def main():
     ]:
         t0 = time.time()
         r = run_distgan(pair, fcfg, ds, approach, steps=args.steps,
-                        batch_size=args.batch, seed=0, eval_samples=1024)
+                        batch_size=args.batch, seed=0, eval_samples=1024,
+                        engine=args.engine,
+                        rounds_per_jit=args.rounds_per_jit)
         cov, best = template_coverage(r.samples.reshape(-1, 28, 28),
                                       templates, thresh=0.35)
         u1 = (best[:5] > 0.35).sum()

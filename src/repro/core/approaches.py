@@ -10,6 +10,17 @@ All step functions share the state layout:
 user u's real data enters only through ``real (U, B, ...)`` slice u —
 the privacy boundary is structural (no cross-user term ever touches raw
 slices; only deltas/logits are combined).
+
+Each family is built in two layers:
+
+* ``BODY_FACTORIES[name](pair, fcfg)`` -> the pure round function
+  ``body(state, real) -> (state, metrics)`` — scan-able: the fused round
+  engine (repro.core.engine) compiles K of these into ONE XLA program via
+  ``jax.lax.scan``.  All PRNG folding goes through ``state.key``, so the
+  scanned trajectory is bit-identical to the per-step loop.
+* ``STEP_FACTORIES[name](pair, fcfg)`` -> the single-step jit of the same
+  body, with the state donated (the U-stacked D/optimizer buffers update
+  in place instead of being copied every round).
 """
 
 from __future__ import annotations
@@ -21,7 +32,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses
-from repro.core.federated import COMBINERS, select_delta
+from repro.core.federated import (COMBINERS, make_flat_layout,
+                                  select_delta_flat)
 from repro.optim import adamw, apply_updates
 
 
@@ -46,7 +58,7 @@ class DistGANConfig:
     upload_frac: float = 0.1
     combiner: str = "max_abs"
     server_scale: float = 1.0  # fold factor for combined deltas
-    use_topk_kernel: bool = False
+    use_topk_kernel: bool = True  # Pallas global-threshold top-k (exact)
     loss_type: str = "bce"     # bce (paper) | wgan (beyond-paper, ref [1])
     wgan_clip: float = 0.05    # weight-clip for the W-GAN critic
 
@@ -107,43 +119,61 @@ def _g_update(pair, g_opt_def, state, loss_fn):
     return apply_updates(state.g, updates), g_opt, loss
 
 
+def d_flat_layout(pair):
+    """Static FlatLayout for one discriminator of ``pair`` (built from
+    abstract shapes — no params are materialized)."""
+    d_shapes = jax.eval_shape(pair.init, jax.random.key(0))[1]
+    return make_flat_layout(d_shapes)
+
+
+def _finalize_step(body):
+    """Single-step jit of a round body with the state donated: the
+    U-stacked D/optimizer buffers update in place instead of being copied
+    every round (donation is a no-op on backends without buffer reuse)."""
+    return jax.jit(body, donate_argnums=(0,))
+
+
 # ---------------------------------------------------------------------------
 # Approach 1: selective-gradient federated server discriminator
 # ---------------------------------------------------------------------------
 
-def make_approach1_step(pair, fcfg: DistGANConfig):
+def make_approach1_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
     combiner = COMBINERS[fcfg.combiner]
+    layout = d_flat_layout(pair)
 
-    def step(state: DistGANState, real):
+    def body(state: DistGANState, real):
         """real: (U, B, ...) per-user private batches."""
         key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
+        U = fcfg.num_users
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
 
-        old_ds = state.ds
+        old_flat = layout.flatten_stacked(state.ds)        # (U, N)
         ds, d_opts, d_losses = jax.vmap(d_update, in_axes=(0, 0, 0, None))(
             state.ds, state.d_opts, real, fake)
 
-        # users upload selected deltas; server folds them (alg. 1 lines 3-5)
-        deltas = jax.tree.map(lambda n, o: n - o, ds, old_ds)
-        sel_keys = jax.random.split(ksel, fcfg.num_users)
-
-        def select_one(delta, k):
-            return select_delta(delta, fcfg.selection, frac=fcfg.upload_frac,
-                                key=k, use_kernel=fcfg.use_topk_kernel)
-
-        masked, kept = jax.vmap(select_one)(deltas, sel_keys)
-        combined = combiner(masked)
-        server_d = jax.tree.map(
-            lambda w, c: (w + fcfg.server_scale * c).astype(w.dtype),
-            state.server_d, combined)
+        # users upload selected deltas; server folds them (alg. 1 lines
+        # 3-5).  Flat-buffer layout: delta is ONE (U, N) subtract, the
+        # selection one masked op per user, the fold one argmax-|.| over
+        # a contiguous buffer — no per-round pytree re-flattening.
+        delta = layout.flatten_stacked(ds) - old_flat
+        sel_keys = jax.random.split(ksel, U)
+        rows = [select_delta_flat(delta[u], fcfg.selection,
+                                  frac=fcfg.upload_frac, key=sel_keys[u],
+                                  use_kernel=fcfg.use_topk_kernel)
+                for u in range(U)]
+        masked = jnp.stack([r[0] for r in rows])           # (U, N)
+        kept = jnp.stack([r[1] for r in rows])
+        combined = combiner(masked)                        # (N,)
+        server_flat = (layout.flatten(state.server_d)
+                       + fcfg.server_scale * combined)
+        server_d = layout.unflatten(server_flat)
 
         # download phase (paper §3.1: "users update local model with the
         # global parameter") — local models re-sync to the server so next
         # round's deltas are w.r.t. the shared point.
-        U = fcfg.num_users
         ds = jax.tree.map(
             lambda s: jnp.broadcast_to(s[None], (U,) + s.shape), server_d)
 
@@ -158,18 +188,22 @@ def make_approach1_step(pair, fcfg: DistGANConfig):
         return new_state, {"d_loss": d_losses, "g_loss": gl,
                            "kept_frac": jnp.mean(kept)}
 
-    return jax.jit(step)
+    return body
+
+
+def make_approach1_step(pair, fcfg: DistGANConfig):
+    return _finalize_step(make_approach1_body(pair, fcfg))
 
 
 # ---------------------------------------------------------------------------
 # Approach 2: averaged-output multi-discriminator
 # ---------------------------------------------------------------------------
 
-def make_approach2_step(pair, fcfg: DistGANConfig):
+def make_approach2_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def step(state: DistGANState, real):
+    def body(state: DistGANState, real):
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[1]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
@@ -190,19 +224,23 @@ def make_approach2_step(pair, fcfg: DistGANConfig):
         return new_state, {"d_loss": d_losses, "g_loss": gl,
                            "kept_frac": jnp.float32(1.0)}
 
-    return jax.jit(step)
+    return body
+
+
+def make_approach2_step(pair, fcfg: DistGANConfig):
+    return _finalize_step(make_approach2_body(pair, fcfg))
 
 
 # ---------------------------------------------------------------------------
 # Approach 3: round-robin one-G-vs-many-D
 # ---------------------------------------------------------------------------
 
-def make_approach3_step(pair, fcfg: DistGANConfig):
+def make_approach3_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
     U = fcfg.num_users
 
-    def step(state: DistGANState, real):
+    def body(state: DistGANState, real):
         """alg. 3: for each user j in turn — train D_j, then update G
         against D_j alone."""
         key = state.key
@@ -236,18 +274,22 @@ def make_approach3_step(pair, fcfg: DistGANConfig):
                            "g_loss": jnp.mean(jnp.stack(g_losses)),
                            "kept_frac": jnp.float32(1.0)}
 
-    return jax.jit(step)
+    return body
+
+
+def make_approach3_step(pair, fcfg: DistGANConfig):
+    return _finalize_step(make_approach3_body(pair, fcfg))
 
 
 # ---------------------------------------------------------------------------
 # Baseline: normal single-node GAN on the union data (paper fig. 14/15)
 # ---------------------------------------------------------------------------
 
-def make_baseline_step(pair, fcfg: DistGANConfig):
+def make_baseline_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def step(state: DistGANState, real):
+    def body(state: DistGANState, real):
         """real: (B, ...) union-data batch (no privacy)."""
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[0]
@@ -267,8 +309,19 @@ def make_baseline_step(pair, fcfg: DistGANConfig):
                             state.step + 1, key), \
             {"d_loss": dl[None], "g_loss": gl, "kept_frac": jnp.float32(1.0)}
 
-    return jax.jit(step)
+    return body
 
+
+def make_baseline_step(pair, fcfg: DistGANConfig):
+    return _finalize_step(make_baseline_body(pair, fcfg))
+
+
+BODY_FACTORIES = {
+    "approach1": make_approach1_body,
+    "approach2": make_approach2_body,
+    "approach3": make_approach3_body,
+    "baseline": make_baseline_body,
+}
 
 STEP_FACTORIES = {
     "approach1": make_approach1_step,

@@ -23,14 +23,78 @@ Two execution modes:
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Literal
+import math
+from typing import Any, Literal
 
 import jax
 import jax.numpy as jnp
 from jax.flatten_util import ravel_pytree
 
 Selection = Literal["topk", "threshold", "random", "none"]
+
+
+# ---------------------------------------------------------------------------
+# Flat-buffer discriminator layout
+# ---------------------------------------------------------------------------
+#
+# The fused round engine keeps D deltas as ONE contiguous (N,) buffer with a
+# *static* unflatten spec, so per-round delta = one subtract, selection = one
+# masked op, and the SPMD fold psums a single buffer instead of a tree of
+# small leaves.  ``ravel_pytree`` rebuilds this spec on every call; FlatLayout
+# builds it once at trace time from the parameter template.
+
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static flatten/unflatten spec for one parameter pytree.
+
+    ``flatten``/``unflatten`` move between the tree and a single (N,)
+    buffer; the ``_stacked`` variants handle (U, ...)-stacked trees and
+    (U, N) buffers (user axis leading).  Leaf order is jax.tree order —
+    identical to ravel_pytree's, so flat indices are interchangeable.
+    """
+
+    treedef: Any
+    shapes: tuple
+    dtypes: tuple
+    sizes: tuple
+    n: int
+
+    def flatten(self, tree) -> jnp.ndarray:
+        leaves = jax.tree.leaves(tree)
+        return jnp.concatenate([jnp.ravel(l) for l in leaves])
+
+    def flatten_stacked(self, tree) -> jnp.ndarray:
+        leaves = jax.tree.leaves(tree)
+        u = leaves[0].shape[0]
+        return jnp.concatenate(
+            [jnp.reshape(l, (u, -1)) for l in leaves], axis=1)
+
+    def _split(self, flat, axis):
+        idx = 0
+        parts = []
+        for size, shape, dt in zip(self.sizes, self.shapes, self.dtypes):
+            sl = jax.lax.slice_in_dim(flat, idx, idx + size, axis=axis)
+            lead = flat.shape[:axis]
+            parts.append(jnp.reshape(sl, lead + shape).astype(dt))
+            idx += size
+        return parts
+
+    def unflatten(self, flat: jnp.ndarray):
+        return jax.tree.unflatten(self.treedef, self._split(flat, 0))
+
+    def unflatten_stacked(self, flat: jnp.ndarray):
+        return jax.tree.unflatten(self.treedef, self._split(flat, 1))
+
+
+def make_flat_layout(example_tree) -> FlatLayout:
+    """Build the static layout from a tree of arrays / ShapeDtypeStructs."""
+    leaves, treedef = jax.tree.flatten(example_tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
+    sizes = tuple(math.prod(s) for s in shapes)
+    return FlatLayout(treedef, shapes, dtypes, sizes, sum(sizes))
 
 
 # ---------------------------------------------------------------------------
@@ -53,16 +117,17 @@ def random_mask(flat: jnp.ndarray, frac: float, key) -> jnp.ndarray:
     return jax.random.uniform(key, flat.shape) < frac
 
 
-def select_delta(delta_tree, policy: Selection, *, frac=0.1, tau=0.0,
-                 key=None, use_kernel: bool = False):
-    """Apply a selection policy to a pytree of deltas.
+def select_delta_flat(flat: jnp.ndarray, policy: Selection, *, frac=0.1,
+                      tau=0.0, key=None, use_kernel: bool = False):
+    """Apply a selection policy to one flat (N,) delta buffer.
 
-    Returns (masked_tree, kept_fraction).  ``use_kernel`` routes the top-k
-    masking through the Pallas kernel (repro.kernels.topk_select).
+    Returns (masked_flat, kept_fraction).  ``use_kernel`` routes the top-k
+    masking through the Pallas global-threshold kernel
+    (repro.kernels.topk_select) — exact full-vector semantics, same mask
+    as ``topk_mask``.
     """
-    flat, unravel = ravel_pytree(delta_tree)
     if policy == "none":
-        return delta_tree, jnp.float32(1.0)
+        return flat, jnp.float32(1.0)
     if policy == "topk":
         if use_kernel:
             from repro.kernels import ops as kops
@@ -77,7 +142,20 @@ def select_delta(delta_tree, policy: Selection, *, frac=0.1, tau=0.0,
     else:
         raise ValueError(policy)
     kept = jnp.mean(mask.astype(jnp.float32))
-    return unravel(flat * mask), kept
+    return flat * mask, kept
+
+
+def select_delta(delta_tree, policy: Selection, *, frac=0.1, tau=0.0,
+                 key=None, use_kernel: bool = False):
+    """Tree-shaped wrapper over ``select_delta_flat`` (re-flattens per call;
+    the fused engine uses FlatLayout + select_delta_flat instead).
+    """
+    if policy == "none":
+        return delta_tree, jnp.float32(1.0)
+    flat, unravel = ravel_pytree(delta_tree)
+    masked, kept = select_delta_flat(flat, policy, frac=frac, tau=tau,
+                                     key=key, use_kernel=use_kernel)
+    return unravel(masked), kept
 
 
 # ---------------------------------------------------------------------------
@@ -151,6 +229,14 @@ def combine_shared_random_spmd(delta_tree, frac: float, key,
 
     Returns (combined_tree, uploaded_fraction)."""
     flat, unravel = ravel_pytree(delta_tree)
+    out, kept = combine_shared_random_flat_spmd(flat, frac, key, axis)
+    return unravel(out), kept
+
+
+def combine_shared_random_flat_spmd(flat: jnp.ndarray, frac: float, key,
+                                    axis: str = "users"):
+    """Flat-buffer core of ``combine_shared_random_spmd``: the engine calls
+    this directly on the FlatLayout buffer (no per-round re-flattening)."""
     n = flat.shape[0]
     k = max(int(n * frac), 1)
     # shared mask: same key on every shard => identical permutation
@@ -159,17 +245,32 @@ def combine_shared_random_spmd(delta_tree, frac: float, key,
     vals = flat[idx]
     summed = jax.lax.pmean(vals, axis)        # only k values cross the axis
     out = jnp.zeros_like(flat).at[idx].set(summed)
-    return unravel(out), jnp.float32(k / n)
+    return out, jnp.float32(k / n)
 
 
 # ---------------------------------------------------------------------------
 # Communication accounting (feeds the roofline's collective term)
 # ---------------------------------------------------------------------------
 
-def upload_bytes(delta_tree, policy: Selection, frac: float) -> int:
+def upload_bytes(delta_tree, policy: Selection, frac: float = 0.1, *,
+                 tau: float = 0.0, kept_frac: float | None = None) -> int:
     """Bytes per user per round crossing the privacy boundary.  Sparse
-    uploads ship (index, value) pairs: 4B idx + 4B val per kept entry."""
+    uploads ship (index, value) pairs: 4B idx + 4B val per kept entry.
+
+    ``topk``/``random`` keep a deterministic/expected ``frac`` of entries.
+    ``threshold`` does NOT use ``frac`` — its kept count is data-dependent,
+    so it is accounted from the actual kept fraction: pass ``kept_frac``
+    (e.g. the trained run's measured value), else it is computed from
+    ``delta_tree`` and ``tau`` directly.
+    """
     n = sum(int(jnp.size(l)) for l in jax.tree.leaves(delta_tree))
     if policy == "none":
         return 4 * n
+    if policy == "threshold":
+        if kept_frac is None:
+            kept = sum(int(jnp.sum(jnp.abs(l) > tau))
+                       for l in jax.tree.leaves(delta_tree))
+        else:
+            kept = int(round(n * float(kept_frac)))
+        return kept * 8
     return int(n * frac) * 8

@@ -24,12 +24,27 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as PS
 
 from repro.core import losses
-from repro.core.approaches import DistGANConfig, DistGANState
+from repro.core.approaches import (DistGANConfig, DistGANState,
+                                   d_flat_layout)
 from repro.core.federated import (combine_max_abs_spmd, combine_mean_spmd,
-                                  combine_shared_random_spmd, select_delta)
+                                  combine_shared_random_flat_spmd,
+                                  select_delta_flat)
 from repro.optim import adamw, apply_updates
 
 AXIS = "users"
+
+
+def shard_map_compat(f, mesh, *, in_specs, out_specs):
+    """shard_map across jax versions: ``jax.shard_map`` + ``check_vma``
+    on current jax, ``jax.experimental.shard_map`` + ``check_rep`` on the
+    0.4.x line.  Replication checking is off in both (the GAN bodies mix
+    replicated and per-user state on purpose)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=False)
 
 
 def _opts(fcfg):
@@ -55,12 +70,13 @@ def _specs_for(state: DistGANState, mesh):
         step=PS(), key=PS())
 
 
-def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
-    """Returns a jit'd SPMD step: (state, real (U,B,...)) -> (state, metrics).
-
-    ``real`` is sharded over the users axis on dim 0.
-    """
+def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
+    """The per-round SPMD function ``body(state, real) -> (state, metrics)``
+    as run INSIDE shard_map (one user per 'users'-axis slice).  Scan-able:
+    the fused engine rolls K of these into one program
+    (repro.core.engine.make_spmd_engine)."""
     g_opt_def, d_opt_def = _opts(fcfg)
+    layout = d_flat_layout(pair)
 
     def local_d_update(d, opt, real, fake):
         def loss_fn(dp):
@@ -80,23 +96,26 @@ def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
 
         metrics = {}
         if approach == "approach1":
-            old = d
+            old_flat = layout.flatten(d)
             d, opt, dl = local_d_update(d, opt, my_real, fake)
-            delta = jax.tree.map(lambda n, o: n - o, d, old)
+            # flat-buffer boundary: the delta is one contiguous (N,)
+            # subtract, and the cross-user fold psums ONE buffer instead
+            # of a tree of small leaves.
+            delta = layout.flatten(d) - old_flat
             if fcfg.selection == "shared_random":
                 # bandwidth-true: only frac*N values cross the users axis
-                comb, kept = combine_shared_random_spmd(
+                comb, kept = combine_shared_random_flat_spmd(
                     delta, fcfg.upload_frac, ksel, AXIS)
             else:
-                masked, kept = select_delta(delta, fcfg.selection,
-                                            frac=fcfg.upload_frac, key=ksel,
-                                            use_kernel=fcfg.use_topk_kernel)
+                masked, kept = select_delta_flat(
+                    delta, fcfg.selection, frac=fcfg.upload_frac, key=ksel,
+                    use_kernel=fcfg.use_topk_kernel)
                 comb = (combine_max_abs_spmd(masked, AXIS)
                         if fcfg.combiner == "max_abs"
                         else combine_mean_spmd(masked, AXIS))
-            server_d = jax.tree.map(
-                lambda w, c: (w + fcfg.server_scale * c).astype(w.dtype),
-                state.server_d, comb)
+            server_flat = (layout.flatten(state.server_d)
+                           + fcfg.server_scale * comb)
+            server_d = layout.unflatten(server_flat)
             d = server_d  # download phase: local D re-syncs to the server
 
             def g_loss(gp):
@@ -171,14 +190,24 @@ def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
                                  server_d, state.step + 1, key)
         return new_state, {"d_loss": dl[None], "g_loss": gl, **metrics}
 
+    return body
+
+
+def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
+    """Returns a jit'd SPMD step: (state, real (U,B,...)) -> (state, metrics).
+
+    ``real`` is sharded over the users axis on dim 0.  The state is
+    donated, so the per-user D/optimizer shards update in place.
+    """
+    body = make_spmd_body(pair, fcfg, approach)
+
     def step(state, real):
         state_specs = _specs_for(state, mesh)
         metric_specs = {"d_loss": PS(AXIS), "g_loss": PS(),
                         "kept_frac": PS()}
-        fn = jax.shard_map(body, mesh=mesh,
-                           in_specs=(state_specs, PS(AXIS)),
-                           out_specs=(state_specs, metric_specs),
-                           check_vma=False)
+        fn = shard_map_compat(body, mesh,
+                              in_specs=(state_specs, PS(AXIS)),
+                              out_specs=(state_specs, metric_specs))
         return fn(state, real)
 
-    return jax.jit(step)
+    return jax.jit(step, donate_argnums=(0,))

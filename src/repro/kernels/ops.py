@@ -15,15 +15,23 @@ import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
-from repro.kernels.topk_select import topk_mask_pallas
+from repro.kernels.topk_select import (topk_mask_pallas,
+                                       topk_mask_pallas_global)
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-@functools.partial(jax.jit, static_argnames=("frac",))
-def topk_mask(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("frac", "mode"))
+def topk_mask(x: jnp.ndarray, frac: float,
+              mode: str = "global") -> jnp.ndarray:
+    """``mode="global"`` (default): exact full-vector top-k semantics —
+    matches the ``jax.lax.top_k`` oracle including ties, so it is a drop-in
+    for ``federated.topk_mask``.  ``mode="block"``: the block-local
+    variant (each BLOCK slice selects its own k)."""
+    if mode == "global":
+        return topk_mask_pallas_global(x, frac, interpret=_interpret())
     return topk_mask_pallas(x, frac, interpret=_interpret())
 
 

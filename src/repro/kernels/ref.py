@@ -11,6 +11,16 @@ import jax.numpy as jnp
 from repro.kernels.topk_select import BLOCK
 
 
+def topk_mask_global_ref(x: jnp.ndarray, frac: float) -> jnp.ndarray:
+    """Full-vector oracle for the global-threshold kernel: keep entries
+    with |x| >= the k-th largest magnitude over the WHOLE vector (ties
+    included), k = max(int(n * frac), 1)."""
+    n = x.shape[0]
+    k = max(int(n * frac), 1)
+    kth = jax.lax.top_k(jnp.abs(x), k)[0][-1]
+    return jnp.abs(x) >= kth
+
+
 def topk_mask_ref(x: jnp.ndarray, frac: float) -> jnp.ndarray:
     """Block-local magnitude top-k mask, same semantics as the kernel:
     per BLOCK-sized slice, keep entries with |x| >= the k-th largest."""

@@ -1,0 +1,198 @@
+"""Fused round engine regression tests: the scan-compiled K-round engine
+must reproduce the per-step jit loop bit-for-bit (same PRNG folding, same
+metric trajectory) for all three approaches + baseline, on the host and
+SPMD layouts; plus the flat-buffer layout roundtrip and the upload-bytes
+accounting satellite."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.approaches import (DistGANConfig, STEP_FACTORIES,
+                                   d_flat_layout, init_state)
+from repro.core.engine import make_engine, run_scanned
+from repro.core.federated import (make_flat_layout, select_delta,
+                                  select_delta_flat, upload_bytes)
+from repro.core.gan import MLPGanConfig, make_mlp_pair
+from repro.core.protocol import run_distgan
+from repro.data.federated import FederatedDataset
+from repro.data.mixtures import make_user_domains
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                  d_hidden=32))
+APPROACHES = ["approach1", "approach2", "approach3", "baseline"]
+
+
+def _ds():
+    users, union = make_user_domains(2, 4, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample, {})
+
+
+# ---------------------------------------------------------------------------
+# engine == per-step loop (the tentpole's correctness contract)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("approach", APPROACHES)
+def test_engine_bitwise_equals_per_step_loop(approach):
+    """Same seed, same data stream: the fused engine's metric trajectory is
+    BITWISE equal to the legacy per-step loop (rounds_per_jit=4 over 10
+    steps also exercises the remainder-chunk path)."""
+    ds = _ds()
+    fcfg = DistGANConfig(selection="topk", upload_frac=0.3)
+    kw = dict(steps=10, batch_size=32, seed=0, eval_samples=0)
+    r_loop = run_distgan(PAIR, fcfg, ds, approach, engine="per_step", **kw)
+    r_fused = run_distgan(PAIR, fcfg, ds, approach, engine="fused",
+                          rounds_per_jit=4, **kw)
+    np.testing.assert_array_equal(r_loop.g_losses, r_fused.g_losses)
+    np.testing.assert_array_equal(r_loop.d_losses, r_fused.d_losses)
+    # final params: scan-vs-jit fusion may differ at ULP level; the
+    # trajectory above is the bitwise contract
+    for a, b in zip(jax.tree.leaves(r_loop.state.g),
+                    jax.tree.leaves(r_fused.state.g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.parametrize("approach", ["approach1", "baseline"])
+def test_run_scanned_equals_iterated_step(approach):
+    """Driving the raw engine with run_scanned == iterating the jit'd
+    single step, including PRNG folding through state.key."""
+    rng = np.random.default_rng(1)
+    shape = (7, 2, 16, 2) if approach != "baseline" else (7, 16, 2)
+    reals = rng.normal(size=shape).astype(np.float32)
+    fcfg = DistGANConfig(num_users=2, selection="topk", upload_frac=0.5)
+
+    s1 = init_state(PAIR, fcfg, jax.random.key(3),
+                    sync_ds=(approach == "approach1"))
+    step = STEP_FACTORIES[approach](PAIR, fcfg)
+    gl = []
+    for i in range(7):
+        s1, m = step(s1, jnp.asarray(reals[i]))
+        gl.append(np.asarray(m["g_loss"]))
+
+    s2 = init_state(PAIR, fcfg, jax.random.key(3),
+                    sync_ds=(approach == "approach1"))
+    eng = make_engine(PAIR, fcfg, approach)
+    s2, ms = run_scanned(eng, s2, reals, rounds_per_jit=3)
+    np.testing.assert_array_equal(np.stack(gl), ms["g_loss"])
+    assert ms["d_loss"].shape[0] == 7
+    assert int(s2.step) == 7
+
+
+def test_spmd_engine_matches_spmd_step_loop():
+    """The scan-inside-shard_map engine reproduces the per-step SPMD loop
+    (4 logical users on host devices)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.gan import make_mlp_pair, MLPGanConfig
+        from repro.core.approaches import DistGANConfig, init_state
+        from repro.core.spmd import make_spmd_step
+        from repro.core.engine import make_spmd_engine
+        from repro.launch.mesh import make_users_mesh
+
+        U = 4
+        pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                          d_hidden=16))
+        mesh = make_users_mesh(U)
+        rng = np.random.default_rng(0)
+        reals = rng.normal(size=(6, U, 16, 2)).astype(np.float32)
+        for ap in ["approach1", "approach2", "approach3"]:
+            fcfg = DistGANConfig(num_users=U, selection="topk",
+                                 upload_frac=0.3)
+            s1 = init_state(pair, fcfg, jax.random.key(0),
+                            sync_ds=(ap == "approach1"))
+            step = make_spmd_step(pair, fcfg, mesh, ap)
+            gl, dl = [], []
+            for i in range(6):
+                s1, m = step(s1, jnp.asarray(reals[i]))
+                gl.append(np.asarray(m["g_loss"]))
+                dl.append(np.asarray(m["d_loss"]))
+            s2 = init_state(pair, fcfg, jax.random.key(0),
+                            sync_ds=(ap == "approach1"))
+            eng = make_spmd_engine(pair, fcfg, mesh, ap)
+            s2, ms = eng(s2, jnp.asarray(reals))
+            np.testing.assert_allclose(np.stack(gl),
+                                       np.asarray(ms["g_loss"]),
+                                       rtol=0, atol=1e-6)
+            np.testing.assert_allclose(np.stack(dl),
+                                       np.asarray(ms["d_loss"]),
+                                       rtol=0, atol=1e-6)
+            print(ap, "OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for ap in ["approach1", "approach2", "approach3"]:
+        assert f"{ap} OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# flat-buffer D layout
+# ---------------------------------------------------------------------------
+
+def test_flat_layout_roundtrip():
+    layout = d_flat_layout(PAIR)
+    _, d = PAIR.init(jax.random.key(0))
+    flat = layout.flatten(d)
+    assert flat.shape == (layout.n,)
+    back = layout.unflatten(flat)
+    for a, b in zip(jax.tree.leaves(d), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_flat_layout_stacked_roundtrip_matches_per_user():
+    layout = d_flat_layout(PAIR)
+    ds = PAIR.init_user_ds(jax.random.key(1), 3)
+    flat = layout.flatten_stacked(ds)            # (U, N)
+    assert flat.shape == (3, layout.n)
+    for u in range(3):
+        one = jax.tree.map(lambda x: x[u], ds)
+        np.testing.assert_array_equal(np.asarray(flat[u]),
+                                      np.asarray(layout.flatten(one)))
+    back = layout.unflatten_stacked(flat)
+    for a, b in zip(jax.tree.leaves(ds), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_select_delta_flat_matches_tree_wrapper():
+    tree = {"a": jnp.arange(10, dtype=jnp.float32) - 5,
+            "b": {"c": jnp.linspace(-1, 1, 16).reshape(4, 4)}}
+    layout = make_flat_layout(tree)
+    for policy, kw in [("topk", {}), ("threshold", {"tau": 0.5}),
+                       ("random", {"key": jax.random.key(0)}),
+                       ("none", {})]:
+        masked_tree, kept_tree = select_delta(tree, policy, frac=0.25, **kw)
+        masked_flat, kept_flat = select_delta_flat(
+            layout.flatten(tree), policy, frac=0.25, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(layout.flatten(masked_tree)), np.asarray(masked_flat))
+        assert float(kept_tree) == float(kept_flat)
+
+
+# ---------------------------------------------------------------------------
+# upload accounting (satellite: threshold was mis-keyed off frac)
+# ---------------------------------------------------------------------------
+
+def test_upload_bytes_accounts_each_policy():
+    tree = {"a": jnp.asarray([0.5, -2.0, 0.0, 0.1]),
+            "b": jnp.ones((6,)) * 3.0}
+    n = 10
+    assert upload_bytes(tree, "none", 0.3) == 4 * n
+    assert upload_bytes(tree, "topk", 0.3) == int(n * 0.3) * 8
+    assert upload_bytes(tree, "random", 0.3) == int(n * 0.3) * 8
+    # threshold does not use frac: accounted from the ACTUAL kept count
+    # (|delta| > tau); here |{-2.0}| and the six 3.0s pass tau=1.0
+    assert upload_bytes(tree, "threshold", 0.3, tau=1.0) == 7 * 8
+    assert upload_bytes(tree, "threshold", 0.9, tau=1.0) == 7 * 8
+    # a measured kept fraction (e.g. from a trained run) takes precedence
+    assert upload_bytes(tree, "threshold", 0.3, kept_frac=0.5) == 5 * 8

@@ -1,11 +1,13 @@
 """Property tests (hypothesis) for the paper's selective-sharing mechanism
 and server combination rules."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 from hypothesis.extra.numpy import arrays
 
@@ -109,13 +111,14 @@ def test_spmd_combine_matches_host_combine():
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as PS
         from repro.core.federated import combine_max_abs, combine_max_abs_spmd
+        from repro.core.spmd import shard_map_compat
         from repro.launch.mesh import make_users_mesh
         mesh = make_users_mesh(4)
         d = jax.random.normal(jax.random.key(0), (4, 37))
         def body(x):
             return combine_max_abs_spmd({"w": x[0]}, "users")["w"]
-        out = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=PS("users"),
-                                    out_specs=PS(), check_vma=False))(d)
+        out = jax.jit(shard_map_compat(body, mesh, in_specs=PS("users"),
+                                       out_specs=PS()))(d)
         want = combine_max_abs({"w": d})["w"]
         np.testing.assert_allclose(np.asarray(out), np.asarray(want),
                                    rtol=1e-6)

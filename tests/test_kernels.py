@@ -16,9 +16,9 @@ from repro.kernels.topk_select import BLOCK
 
 @pytest.mark.parametrize("n", [BLOCK, 3 * BLOCK, BLOCK + 17, 5000])
 @pytest.mark.parametrize("frac", [0.01, 0.1, 0.5])
-def test_topk_mask_matches_ref(n, frac):
+def test_topk_mask_block_matches_ref(n, frac):
     x = jax.random.normal(jax.random.key(n), (n,))
-    got = ops.topk_mask(x, frac)
+    got = ops.topk_mask(x, frac, mode="block")
     want = ref.topk_mask_ref(x, frac)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
@@ -30,6 +30,38 @@ def test_topk_mask_keeps_largest():
     kept, dropped = mags[m], mags[~m]
     assert kept.min() >= dropped.max()
     assert m.sum() == int(BLOCK * 0.1)
+
+
+@pytest.mark.parametrize("n", [100, 5000, BLOCK, BLOCK + 17, 3 * BLOCK])
+@pytest.mark.parametrize("frac", [0.01, 0.1, 0.5, 1.0])
+def test_topk_mask_global_matches_full_vector_oracle(n, frac):
+    """Default mode: the two-pass global-threshold kernel is EXACTLY the
+    jax.lax.top_k oracle at the full-vector level (bit-level bisection —
+    no epsilon slop)."""
+    x = jax.random.normal(jax.random.key(n + int(frac * 100)), (n,))
+    got = ops.topk_mask(x, frac)          # mode="global" is the default
+    want = ref.topk_mask_global_ref(x, frac)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [257, 5000, BLOCK + 3])
+@pytest.mark.parametrize("frac", [0.05, 0.3, 0.9])
+def test_topk_mask_global_tie_cases(n, frac):
+    """Quantized values force duplicated magnitudes at the k-th rank: the
+    kernel must keep ALL ties, exactly like the oracle."""
+    x = jnp.round(jax.random.normal(jax.random.key(n), (n,)) * 4) / 4
+    got = np.asarray(ops.topk_mask(x, frac))
+    want = np.asarray(ref.topk_mask_global_ref(x, frac))
+    np.testing.assert_array_equal(got, want)
+    k = max(int(n * frac), 1)
+    assert got.sum() >= k                 # ties can only exceed k
+
+
+def test_topk_mask_global_degenerate_vectors():
+    for x in [jnp.ones(300), jnp.zeros(300), -jnp.ones(300) * 0.5]:
+        got = np.asarray(ops.topk_mask(x, 0.1))
+        want = np.asarray(ref.topk_mask_global_ref(x, 0.1))
+        np.testing.assert_array_equal(got, want)
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,11 @@
 """MoE routing/dispatch invariants (hypothesis property tests)."""
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.configs.base import get_config

@@ -71,8 +71,8 @@ def test_approach1_with_pallas_topk_kernel():
         from repro.data.mixtures import make_user_domains
         from repro.data.federated import FederatedDataset
 
-        # D must span multiple 8192-element kernel blocks, else block-local
-        # top-k keeps everything (documented small-tensor semantics)
+        # D spans multiple 8192-element kernel blocks: exercises the
+        # two-pass (block maxima -> refine) global-threshold path
         pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
                                           d_hidden=192))
         users, union = make_user_domains(2, 2, separation=1.0)
@@ -82,8 +82,8 @@ def test_approach1_with_pallas_topk_kernel():
         r = run_distgan(pair, fcfg, ds, "approach1", steps=10, batch_size=32,
                         seed=0, eval_samples=0)
         assert np.all(np.isfinite(r.g_losses))
-        # ~39k-param D over 5 blocks: kept ~= frac + last-block padding slack
-        assert 0.1 < r.extra["kept_frac"] < 0.6, r.extra
+        # global-threshold kernel: kept == the exact requested fraction
+        assert abs(r.extra["kept_frac"] - 0.2) < 0.01, r.extra
         print("KERNEL_OK", r.extra["kept_frac"])
     """)
     assert "KERNEL_OK" in r.stdout, r.stdout + r.stderr

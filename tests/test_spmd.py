@@ -94,12 +94,12 @@ def test_spmd_approach2_grad_matches_host_simulation():
             # per-shard grads are complete; pmean just de-duplicates
             return jax.tree.map(lambda x: jax.lax.pmean(x, "users"), grads)
 
-        got = jax.jit(jax.shard_map(
-            body, mesh=mesh,
+        from repro.core.spmd import shard_map_compat
+        got = jax.jit(shard_map_compat(
+            body, mesh,
             in_specs=(jax.tree.map(lambda _: PS(), g),
                       jax.tree.map(lambda _: PS("users"), ds)),
-            out_specs=jax.tree.map(lambda _: PS(), g),
-            check_vma=False))(g, ds)
+            out_specs=jax.tree.map(lambda _: PS(), g)))(g, ds)
         for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                        rtol=2e-4, atol=2e-6)

@@ -3,11 +3,12 @@ data pipeline."""
 
 import os
 
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+st = pytest.importorskip("hypothesis.strategies")
 from hypothesis import given, settings
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint

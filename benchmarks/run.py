@@ -138,7 +138,8 @@ def _fused_vs_per_step(approaches, reps, batch):
     worst = min(speedups, key=speedups.get)
     emit("paper_time/fused_speedup", 0.0,
          f"min_x{speedups[worst]:.2f}({worst});" +
-         ";".join(f"{a}=x{s:.2f}" for a, s in speedups.items()))
+         ";".join(f"{a}=x{s:.2f}" for a, s in speedups.items()) +
+         f";pass={int(speedups[worst] >= 3.0)}")
 
 
 def paper_time():
@@ -376,6 +377,50 @@ def paper_collapse():
 
 
 # ---------------------------------------------------------------------------
+# Cohort-virtualized federation: U logical users, C-wide compiled program
+# ---------------------------------------------------------------------------
+
+def paper_cohort():
+    """U=256 logical users, cohort C=8 per round (uniform scheduler): the
+    compiled program is shaped by C only, so us/round must be independent
+    of U — measured as the U=256 / U=32 per-round ratio at fixed C.  Host
+    data sampling also scales with C (only cohort members are drawn)."""
+    import jax
+    from repro.core.approaches import DistGANConfig
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+    from repro.core.protocol import run_distgan
+    from repro.data.federated import FederatedDataset
+    from repro.data.mixtures import make_user_domains
+
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                      d_hidden=16))
+    C = 8
+    steps = 48 if QUICK else 96
+    times = {}
+    for U in (32, 256):
+        users, union = make_user_domains(U, 1, 1.0)
+        ds = FederatedDataset([u.sample for u in users], union.sample,
+                              {"shard_sizes": [1000] * U})
+        fcfg = DistGANConfig(num_users=U, selection="topk",
+                             upload_frac=0.5)
+        r = run_distgan(pair, fcfg, ds, "approach1", steps=steps,
+                        batch_size=32, seed=SEED, eval_samples=0,
+                        rounds_per_jit=16, participation="uniform",
+                        cohort_size=C)
+        t_us = r.extra["min_step_time_s"] * 1e6
+        times[U] = t_us
+        counts = r.extra["participation_counts"]
+        emit(f"paper_cohort/U{U}_C{C}_approach1", t_us,
+             f"steps={steps};users_touched={int((counts > 0).sum())}/{U};"
+             f"max_staleness={int(r.extra['staleness'].max())};"
+             f"finite={int(np.all(np.isfinite(r.g_losses)))}")
+    ratio = times[256] / times[32]
+    emit("paper_cohort/u_independence", 0.0,
+         f"t_U256/t_U32=x{ratio:.2f};compiled_width=C={C};"
+         f"pass={int(ratio < 1.5)}")
+
+
+# ---------------------------------------------------------------------------
 # Cross-user bandwidth: the paper's selective upload, bandwidth-true
 # (EXPERIMENTS.md §Perf pair C iter 5)
 # ---------------------------------------------------------------------------
@@ -510,13 +555,15 @@ BENCHES = {
     "paper_multiuser": paper_multiuser,
     "paper_conv_gan": paper_conv_gan,
     "paper_collapse": paper_collapse,
+    "paper_cohort": paper_cohort,
     "paper_bandwidth": paper_bandwidth,
     "kernels_micro": kernels_micro,
     "roofline_table": roofline_table,
 }
 
-# --quick smoke gate (<60 s): the fused-engine comparison + kernel micro
-QUICK_BENCHES = ["paper_time", "kernels_micro"]
+# --quick smoke gate (<~90 s): fused-engine comparison, kernel micro, and
+# the cohort U-independence check
+QUICK_BENCHES = ["paper_time", "kernels_micro", "paper_cohort"]
 
 
 def write_bench_json(path: str = BENCH_JSON) -> None:
@@ -556,6 +603,11 @@ def main() -> None:
         BENCHES[n]()
     write_bench_json()
     print(f"# wrote {os.path.abspath(BENCH_JSON)}", file=sys.stderr)
+    # rows carrying an explicit pass flag ARE the smoke gate: a quick CI
+    # run must fail visibly, not just record pass=0 in the artifact
+    failed = [n for n, d in DERIVED.items() if "pass=0" in d]
+    if failed:
+        sys.exit(f"gate failure in: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -18,6 +18,13 @@ Each family is built in two layers:
   engine (repro.core.engine) compiles K of these into ONE XLA program via
   ``jax.lax.scan``.  All PRNG folding goes through ``state.key``, so the
   scanned trajectory is bit-identical to the per-step loop.
+
+  Bodies are COHORT-WIDTH AGNOSTIC: the user axis they see is whatever
+  leading axis ``state.ds`` / ``real`` carry.  Under full participation
+  that is all ``num_users`` users; under the cohort-virtualized engine
+  (repro.core.engine.make_cohort_engine) it is a C-row slice gathered from
+  the (U, N) CohortStore, with ``body(state, real, ages)`` receiving each
+  member's participation age for the staleness-aware combiners.
 * ``STEP_FACTORIES[name](pair, fcfg)`` -> the single-step jit of the same
   body, with the state donated (the U-stacked D/optimizer buffers update
   in place instead of being copied every round).
@@ -58,6 +65,7 @@ class DistGANConfig:
     upload_frac: float = 0.1
     combiner: str = "max_abs"
     server_scale: float = 1.0  # fold factor for combined deltas
+    staleness_decay: float = 0.5  # delta age discount (staleness_* combiners)
     use_topk_kernel: bool = True  # Pallas global-threshold top-k (exact)
     loss_type: str = "bce"     # bce (paper) | wgan (beyond-paper, ref [1])
     wgan_clip: float = 0.05    # weight-clip for the W-GAN critic
@@ -113,8 +121,21 @@ def _g_loss_single(pair, fcfg, d, fake):
     return losses.g_loss_nonsat(s)
 
 
+def _pin(*trees):
+    """``jax.lax.optimization_barrier`` as a cluster pin: XLA fuses a
+    subgraph with whatever consumes it, so the SAME round body embedded in
+    different programs (per-step jit, fused scan, cohort gather/scatter
+    scan) can tile its reductions differently and drift at ULP level.
+    Pinning the update outputs gives every engine one canonical
+    clustering — the bitwise-trajectory contract in tests/test_engine.py
+    depends on it.  Semantically the identity function."""
+    out = jax.lax.optimization_barrier(trees)
+    return out[0] if len(trees) == 1 else out
+
+
 def _g_update(pair, g_opt_def, state, loss_fn):
     loss, grads = jax.value_and_grad(loss_fn)(state.g)
+    grads = _pin(grads)
     updates, g_opt = g_opt_def.update(grads, state.g_opt, state.g)
     return apply_updates(state.g, updates), g_opt, loss
 
@@ -124,6 +145,14 @@ def d_flat_layout(pair):
     abstract shapes — no params are materialized)."""
     d_shapes = jax.eval_shape(pair.init, jax.random.key(0))[1]
     return make_flat_layout(d_shapes)
+
+
+def d_opt_flat_layout(pair, fcfg: DistGANConfig):
+    """Static FlatLayout for one user's D-optimizer state (the CohortStore
+    keeps it as an (U, No) flat buffer next to the (U, Nd) params)."""
+    d_shapes = jax.eval_shape(pair.init, jax.random.key(0))[1]
+    _, d_opt_def = _opts(fcfg)
+    return make_flat_layout(jax.eval_shape(d_opt_def.init, d_shapes))
 
 
 def _finalize_step(body):
@@ -143,19 +172,23 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
     combiner = COMBINERS[fcfg.combiner]
     layout = d_flat_layout(pair)
 
-    def body(state: DistGANState, real):
-        """real: (U, B, ...) per-user private batches."""
+    def body(state: DistGANState, real, ages=None):
+        """real: (C, B, ...) private batches of the participating users
+        (C == num_users under full participation); ``ages`` (C,) is each
+        member's rounds-since-last-participation, consumed only by the
+        staleness-aware combiners."""
         key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
-        U = fcfg.num_users
+        U = real.shape[0]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
 
-        old_flat = layout.flatten_stacked(state.ds)        # (U, N)
-        ds, d_opts, d_losses = jax.vmap(d_update, in_axes=(0, 0, 0, None))(
-            state.ds, state.d_opts, real, fake)
+        old_flat = layout.flatten_stacked(state.ds)        # (C, N)
+        ds, d_opts, d_losses = _pin(*jax.vmap(
+            d_update, in_axes=(0, 0, 0, None))(
+            state.ds, state.d_opts, real, fake))
 
         # users upload selected deltas; server folds them (alg. 1 lines
-        # 3-5).  Flat-buffer layout: delta is ONE (U, N) subtract, the
+        # 3-5).  Flat-buffer layout: delta is ONE (C, N) subtract, the
         # selection one masked op per user, the fold one argmax-|.| over
         # a contiguous buffer — no per-round pytree re-flattening.
         delta = layout.flatten_stacked(ds) - old_flat
@@ -164,16 +197,22 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
                                   frac=fcfg.upload_frac, key=sel_keys[u],
                                   use_kernel=fcfg.use_topk_kernel)
                 for u in range(U)]
-        masked = jnp.stack([r[0] for r in rows])           # (U, N)
+        masked = jnp.stack([r[0] for r in rows])           # (C, N)
         kept = jnp.stack([r[1] for r in rows])
-        combined = combiner(masked)                        # (N,)
+        if getattr(combiner, "needs_ages", False):
+            combined = combiner(masked, ages, decay=fcfg.staleness_decay)
+        else:
+            combined = combiner(masked)                    # (N,)
         server_flat = (layout.flatten(state.server_d)
                        + fcfg.server_scale * combined)
         server_d = layout.unflatten(server_flat)
 
         # download phase (paper §3.1: "users update local model with the
         # global parameter") — local models re-sync to the server so next
-        # round's deltas are w.r.t. the shared point.
+        # round's deltas are w.r.t. the shared point.  Under partial
+        # participation only the cohort re-syncs; absent users keep the
+        # server copy from their last round (that gap is what ``ages``
+        # measures next time they are drawn).
         ds = jax.tree.map(
             lambda s: jnp.broadcast_to(s[None], (U,) + s.shape), server_d)
 
@@ -203,12 +242,15 @@ def make_approach2_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def body(state: DistGANState, real):
+    def body(state: DistGANState, real, ages=None):
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[1]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
-        ds, d_opts, d_losses = jax.vmap(d_update, in_axes=(0, 0, 0, None))(
-            state.ds, state.d_opts, real, fake)
+        ds_in, opts_in, real_in, fake_in = _pin(state.ds, state.d_opts,
+                                                real, fake)
+        ds, d_opts, d_losses = _pin(*jax.vmap(
+            d_update, in_axes=(0, 0, 0, None))(
+            ds_in, opts_in, real_in, fake_in))
 
         # alg. 2 line 4: outputs = mean_i D_i(fake); criterion vs real labels
         def g_loss(gp):
@@ -238,23 +280,23 @@ def make_approach2_step(pair, fcfg: DistGANConfig):
 def make_approach3_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
-    U = fcfg.num_users
 
-    def body(state: DistGANState, real):
-        """alg. 3: for each user j in turn — train D_j, then update G
-        against D_j alone."""
+    def body(state: DistGANState, real, ages=None):
+        """alg. 3: for each participating user j in turn — train D_j, then
+        update G against D_j alone (j ranges over the cohort width)."""
         key = state.key
         g, g_opt = state.g, state.g_opt
         ds, d_opts = state.ds, state.d_opts
         g_losses, d_losses = [], []
+        U = real.shape[0]
 
-        for j in range(U):  # U is static & small; unrolled under jit
+        for j in range(U):  # cohort width is static & small; unrolled
             key, kz1, kz2 = jax.random.split(key, 3)
             B = real.shape[1]
             fake = pair.g_apply(g, pair.sample_z(kz1, B))
             d_j = jax.tree.map(lambda x: x[j], ds)
             o_j = jax.tree.map(lambda x: x[j], d_opts)
-            d_j, o_j, dl = d_update(d_j, o_j, real[j], fake)
+            d_j, o_j, dl = _pin(*d_update(d_j, o_j, real[j], fake))
             ds = jax.tree.map(lambda s, n: s.at[j].set(n), ds, d_j)
             d_opts = jax.tree.map(lambda s, n: s.at[j].set(n), d_opts, o_j)
 
@@ -289,14 +331,14 @@ def make_baseline_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def body(state: DistGANState, real):
-        """real: (B, ...) union-data batch (no privacy)."""
+    def body(state: DistGANState, real, ages=None):
+        """real: (B, ...) union-data batch (no privacy; cohorting n/a)."""
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[0]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
         d = jax.tree.map(lambda x: x[0], state.ds)
         o = jax.tree.map(lambda x: x[0], state.d_opts)
-        d, o, dl = d_update(d, o, real, fake)
+        d, o, dl = _pin(*d_update(d, o, real, fake))
         ds = jax.tree.map(lambda s, n: s.at[0].set(n), state.ds, d)
         d_opts = jax.tree.map(lambda s, n: s.at[0].set(n), state.d_opts, o)
 

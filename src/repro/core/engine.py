@@ -9,7 +9,7 @@ structurally:
 * the round body (``BODY_FACTORIES[approach]``) is rolled over a
   ``(K, ...)`` stack of pre-staged real batches with ``jax.lax.scan`` —
   one compile, one dispatch per K rounds;
-* the carried state is donated (``donate_argnums=(0,)``) so the U-stacked
+* the carried state is donated (``donate_argnums=(0,)``) so the stacked
   discriminator/optimizer buffers update in place across chunks;
 * metrics come back K-stacked and are fetched with a single host sync per
   chunk instead of one per round.
@@ -18,40 +18,78 @@ PRNG folding goes through ``state.key`` exactly as in the per-step path,
 so the scanned trajectory is bit-identical to the Python loop (pinned by
 tests/test_engine.py).
 
+Every engine takes an optional ``valid (K,) bool`` third argument: rounds
+flagged invalid leave the carry untouched (their metrics are garbage and
+must be sliced off by the caller).  ``run_scanned`` uses this to pad the
+trailing remainder chunk to a full ``rounds_per_jit`` rounds, so ANY
+``steps % rounds_per_jit`` compiles exactly one program.  A valid round's
+update is a ``jnp.where(True, new, old)`` — an exact select, so masking
+never perturbs trajectories.
+
+Cohort virtualization (``make_cohort_engine``): a run can have U LOGICAL
+users while the compiled program is shaped only by a cohort width C <= U.
+The (U, N) per-user D/optimizer state lives in a ``CohortStore`` carried
+through the scan; each round gathers the scheduled cohort's C rows,
+runs the width-C body, and scatters the updated rows back (stamping
+``last_round`` for the staleness-aware combiners).  With C == U and the
+``full`` scheduler the gather/scatter is an exact permutation, so the
+trajectory stays bit-identical to the non-virtualized engine (pinned by
+tests/test_engine.py).
+
 Use ``make_engine`` for the host-simulated stacked-user layout and
 ``make_spmd_engine`` for the mesh-mapped layout (scan *inside*
-``shard_map``: collectives stay per-round, dispatch is per-chunk).
-``run_scanned`` drives an engine over an arbitrary number of rounds in
-chunks of ``rounds_per_jit`` (one extra compile for the remainder chunk,
-if any).
+``shard_map``: collectives stay per-round, dispatch is per-chunk);
+``make_spmd_cohort_engine`` maps the COHORT onto the mesh axis, so the
+device count bounds C — not U.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.approaches import BODY_FACTORIES, DistGANConfig, DistGANState
+from repro.core.approaches import (BODY_FACTORIES, DistGANConfig,
+                                   DistGANState, d_flat_layout,
+                                   d_opt_flat_layout, init_state)
+from repro.core.federated import (CohortStore, cohort_gather, cohort_scatter,
+                                  make_cohort_store)
 
 DEFAULT_ROUNDS_PER_JIT = 16
+
+
+def _masked(body):
+    """Wrap a scan body so rounds with ``valid=False`` leave the carry
+    untouched.  ``jnp.where`` on a scalar bool is an exact select: with
+    ``valid=True`` the output is bitwise the unmasked result."""
+
+    def wrapped(carry, inp):
+        xs, valid = inp
+        new_carry, metrics = body(carry, xs)
+        keep = lambda n, o: jnp.where(valid, n, o)
+        return jax.tree.map(keep, new_carry, carry), metrics
+
+    return wrapped
 
 
 def make_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
     """Scan-fused multi-round step for the host-simulated layout.
 
-    Returns ``chunk(state, reals) -> (state, metrics)`` where ``reals`` is
-    ``(K, U, B, ...)`` (``(K, B, ...)`` for the baseline) and every metric
-    leaf gains a leading K axis.  K is a trace-time constant: driving with
-    a fixed ``rounds_per_jit`` reuses one compiled program for all full
-    chunks.
+    Returns ``chunk(state, reals, valid=None) -> (state, metrics)`` where
+    ``reals`` is ``(K, U, B, ...)`` (``(K, B, ...)`` for the baseline) and
+    every metric leaf gains a leading K axis.  K is a trace-time constant:
+    driving with a fixed ``rounds_per_jit`` reuses one compiled program
+    for all full chunks; padded+masked calls (``valid`` given) reuse one
+    program for EVERY chunk, remainder included.
     """
     body = BODY_FACTORIES[approach](pair, fcfg)
 
-    def chunk(state: DistGANState, reals):
-        return jax.lax.scan(body, state, reals)
+    def chunk(state: DistGANState, reals, valid=None):
+        if valid is None:
+            return jax.lax.scan(body, state, reals)
+        return jax.lax.scan(_masked(body), state, (reals, valid))
 
     return jax.jit(chunk, donate_argnums=(0,))
 
@@ -61,7 +99,7 @@ def make_spmd_engine(pair, fcfg: DistGANConfig, mesh, approach: str):
 
     The scan sits INSIDE shard_map, so per-round collectives (delta folds,
     logit pmeans) compile into one program; ``reals`` is ``(K, U, B, ...)``
-    sharded over users on dim 1.
+    sharded over users on dim 1.  ``valid (K,) bool`` is replicated.
     """
     from jax.sharding import PartitionSpec as PS
 
@@ -70,37 +108,200 @@ def make_spmd_engine(pair, fcfg: DistGANConfig, mesh, approach: str):
 
     body = make_spmd_body(pair, fcfg, approach)
 
-    def chunk(state: DistGANState, reals):
+    def chunk(state: DistGANState, reals, valid=None):
         state_specs = _specs_for(state, mesh)
         metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
                         "kept_frac": PS()}
 
-        def scanned(st, rs):
-            return jax.lax.scan(body, st, rs)
+        if valid is None:
+            def scanned(st, rs):
+                return jax.lax.scan(body, st, rs)
+            in_specs = (state_specs, PS(None, AXIS))
+        else:
+            def scanned(st, rs, vs):
+                return jax.lax.scan(_masked(body), st, (rs, vs))
+            in_specs = (state_specs, PS(None, AXIS), PS())
 
-        fn = shard_map_compat(scanned, mesh,
-                              in_specs=(state_specs, PS(None, AXIS)),
+        fn = shard_map_compat(scanned, mesh, in_specs=in_specs,
                               out_specs=(state_specs, metric_specs))
-        return fn(state, reals)
+        return fn(state, reals) if valid is None else fn(state, reals, valid)
 
     return jax.jit(chunk, donate_argnums=(0,))
 
 
-def run_scanned(engine: Callable, state: DistGANState, reals,
+# ---------------------------------------------------------------------------
+# Cohort-virtualized engine: U logical users, C-wide compiled program
+# ---------------------------------------------------------------------------
+
+class CohortState(NamedTuple):
+    """Scan carry for the cohort engine: shared (replicated) training state
+    plus the resident per-user CohortStore."""
+
+    g: jnp.ndarray
+    g_opt: jnp.ndarray
+    store: CohortStore
+    server_d: jnp.ndarray
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def init_cohort_state(pair, fcfg: DistGANConfig, key, *,
+                      sync_ds: bool = False) -> CohortState:
+    """Build the cohort carry from the standard ``init_state`` layout (the
+    (U, ...)-stacked trees are packed into flat buffers; values transfer
+    bit-exactly, so a C==U cohort run starts from the identical point)."""
+    st = init_state(pair, fcfg, key, sync_ds=sync_ds)
+    store = make_cohort_store(st.ds, st.d_opts, d_flat_layout(pair),
+                              d_opt_flat_layout(pair, fcfg))
+    return CohortState(st.g, st.g_opt, store, st.server_d, st.step, st.key)
+
+
+def cohort_state_to_full(pair, fcfg: DistGANConfig,
+                         cstate: CohortState) -> DistGANState:
+    """Unpack the store back into the stacked-tree DistGANState layout
+    (evaluation / checkpointing interop)."""
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+    ds, d_opts = cohort_gather(cstate.store,
+                               jnp.arange(cstate.store.num_users),
+                               d_layout, o_layout)
+    return DistGANState(cstate.g, cstate.g_opt, ds, d_opts, cstate.server_d,
+                        cstate.step, cstate.key)
+
+
+def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
+    """Scan-fused cohort engine for the host-simulated layout.
+
+    Returns ``chunk(cstate, reals, idx, valid=None)`` with
+    ``reals (K, C, B, ...)`` the scheduled cohorts' private batches and
+    ``idx (K, C) int32`` the cohort membership per round.  Per round the
+    body sees ONLY the gathered C rows — the compiled program is shaped by
+    C, while U merely sizes the resident (U, N) buffers (gather/scatter
+    touch C rows; XLA updates the donated store in place).
+    """
+    assert approach != "baseline", "baseline has no user axis to virtualize"
+    body = BODY_FACTORIES[approach](pair, fcfg)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(carry: CohortState, inp):
+        real, idx = inp
+        store = carry.store
+        ds, opts = cohort_gather(store, idx, d_layout, o_layout)
+        # materialize the gathered slices: without the barrier XLA may fuse
+        # the gather/unflatten into the body's loss reductions and change
+        # their tiling, breaking ULP-equality with the non-virtualized
+        # engine (the C == U bitwise pin in tests/test_engine.py)
+        ds, opts = jax.lax.optimization_barrier((ds, opts))
+        ages = carry.step - store.last_round[idx]          # (C,) i32
+        state = DistGANState(carry.g, carry.g_opt, ds, opts, carry.server_d,
+                             carry.step, carry.key)
+        new_state, metrics = body(state, real, ages)
+        # same reasoning on the way out: keep the scatter's flatten from
+        # fusing back into the body's update/loss clusters
+        nds, nopts = jax.lax.optimization_barrier(
+            (new_state.ds, new_state.d_opts))
+        store = cohort_scatter(store, idx, nds, nopts,
+                               carry.step, d_layout, o_layout)
+        new_carry = CohortState(new_state.g, new_state.g_opt, store,
+                                new_state.server_d, new_state.step,
+                                new_state.key)
+        metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
+        return new_carry, metrics
+
+    def chunk(cstate: CohortState, reals, idx, valid=None):
+        if valid is None:
+            return jax.lax.scan(round_fn, cstate, (reals, idx))
+        return jax.lax.scan(_masked(round_fn), cstate, ((reals, idx), valid))
+
+    # NOT donated: in-place scatter into a donated (U, N) carry lets XLA
+    # reschedule the update clusters and the trajectory drifts at ULP from
+    # the non-virtualized engine, breaking the C == U bitwise pin.  The
+    # cost is one store copy per CHUNK (amortized over rounds_per_jit).
+    return jax.jit(chunk)
+
+
+def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
+                            cohort_size: int):
+    """Cohort engine with the COHORT mapped onto the mesh ``users`` axis:
+    one cohort member per device slice, so the device count bounds C while
+    U is just the row count of the replicated CohortStore.  The scan sits
+    inside shard_map as in ``make_spmd_engine``.
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core.spmd import (AXIS, make_spmd_cohort_round,
+                                 shard_map_compat)
+
+    axis_size = mesh.shape[AXIS]
+    assert axis_size == cohort_size, (
+        f"cohort must equal the '{AXIS}' mesh axis (C={cohort_size}, "
+        f"axis={axis_size})")
+    round_fn = make_spmd_cohort_round(pair, fcfg, approach, cohort_size)
+
+    def chunk(cstate: CohortState, reals, idx, valid=None):
+        rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
+        carry_specs = CohortState(
+            g=rep(cstate.g), g_opt=rep(cstate.g_opt),
+            store=CohortStore(PS(), PS(), PS()),
+            server_d=rep(cstate.server_d), step=PS(), key=PS())
+        metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
+                        "kept_frac": PS(), "mean_age": PS()}
+
+        if valid is None:
+            def scanned(st, rs, ix):
+                return jax.lax.scan(round_fn, st, (rs, ix))
+            in_specs = (carry_specs, PS(None, AXIS), PS(None, AXIS))
+            args = (cstate, reals, idx)
+        else:
+            def scanned(st, rs, ix, vs):
+                return jax.lax.scan(_masked(round_fn), st, ((rs, ix), vs))
+            in_specs = (carry_specs, PS(None, AXIS), PS(None, AXIS), PS())
+            args = (cstate, reals, idx, valid)
+
+        fn = shard_map_compat(scanned, mesh, in_specs=in_specs,
+                              out_specs=(carry_specs, metric_specs))
+        return fn(*args)
+
+    return jax.jit(chunk)  # not donated — see make_cohort_engine
+
+
+# ---------------------------------------------------------------------------
+# Chunked drivers
+# ---------------------------------------------------------------------------
+
+def _pad_to(arr: np.ndarray, k: int):
+    """Pad ``arr`` on the leading axis to length ``k`` by repeating the
+    last entry (masked rounds never touch the carry; repeating keeps the
+    padding's shapes/dtypes trivially right)."""
+    short = k - arr.shape[0]
+    if short <= 0:
+        return arr
+    fill = np.broadcast_to(arr[-1:], (short,) + arr.shape[1:])
+    return np.concatenate([arr, fill], axis=0)
+
+
+def run_scanned(engine: Callable, state, reals,
                 rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT):
     """Drive ``engine`` over ``reals`` (leading axis = rounds) in chunks.
 
-    All full chunks share one compiled program; a trailing remainder chunk
-    (if ``K % rounds_per_jit != 0``) costs one extra compile.  Returns
-    ``(state, metrics)`` with metrics np-concatenated over all K rounds.
+    Every chunk — the trailing remainder included — is padded to
+    ``rounds_per_jit`` rounds with a validity mask, so ANY
+    ``steps % rounds_per_jit`` compiles exactly ONE program.  Returns
+    ``(state, metrics)`` with metrics np-concatenated over the real (un-
+    padded) rounds.
     """
+    reals = np.asarray(reals)
     k_total = reals.shape[0]
+    rpj = min(rounds_per_jit, k_total)
     chunks_metrics = []
     i = 0
     while i < k_total:
-        k = min(rounds_per_jit, k_total - i)
-        state, m = engine(state, jnp.asarray(reals[i:i + k]))
-        chunks_metrics.append(jax.tree.map(np.asarray, m))
+        k = min(rpj, k_total - i)
+        chunk_reals = _pad_to(reals[i:i + k], rpj)
+        valid = jnp.asarray(np.arange(rpj) < k)
+        state, m = engine(state, jnp.asarray(chunk_reals), valid)
+        chunks_metrics.append(jax.tree.map(lambda x: np.asarray(x)[:k], m))
         i += k
     metrics = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
                            *chunks_metrics)

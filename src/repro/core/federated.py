@@ -26,10 +26,11 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Literal
+from typing import Any, Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.flatten_util import ravel_pytree
 
 Selection = Literal["topk", "threshold", "random", "none"]
@@ -95,6 +96,115 @@ def make_flat_layout(example_tree) -> FlatLayout:
     dtypes = tuple(jnp.dtype(l.dtype) for l in leaves)
     sizes = tuple(math.prod(s) for s in shapes)
     return FlatLayout(treedef, shapes, dtypes, sizes, sum(sizes))
+
+
+# ---------------------------------------------------------------------------
+# Cohort-virtualized per-user state
+# ---------------------------------------------------------------------------
+#
+# The compiled program no longer has to be shaped by the number of LOGICAL
+# users U: the (U, ...) per-user discriminator/optimizer state lives in flat
+# (U, N) buffers, and each round a cohort of C <= U rows is gathered into the
+# scan body and scattered back.  U only sizes the resident buffers; every
+# traced shape is C.  ``last_round`` records each user's most recent
+# participation so stale deltas can be aged by the staleness-aware combiners.
+
+class CohortStore(NamedTuple):
+    """Resident per-user state as flat buffers (one row per logical user).
+
+    ``d_flat``     (U, Nd)  discriminator params, FlatLayout row layout
+    ``opt_flat``   (U, No)  optimizer state (int leaves are stored as f32
+                            and cast back on unflatten — exact below 2**24,
+                            far beyond any round count here)
+    ``last_round`` (U,) i32 round at which the user last participated
+    """
+
+    d_flat: jnp.ndarray
+    opt_flat: jnp.ndarray
+    last_round: jnp.ndarray
+
+    @property
+    def num_users(self) -> int:
+        return self.d_flat.shape[0]
+
+
+def make_cohort_store(ds, d_opts, d_layout: FlatLayout,
+                      opt_layout: FlatLayout) -> CohortStore:
+    """Pack (U, ...)-stacked D/optimizer trees into resident flat buffers."""
+    u = jax.tree.leaves(ds)[0].shape[0]
+    return CohortStore(
+        d_flat=d_layout.flatten_stacked(ds),
+        opt_flat=opt_layout.flatten_stacked(d_opts),
+        last_round=jnp.zeros((u,), jnp.int32))
+
+
+def cohort_gather(store: CohortStore, idx, d_layout: FlatLayout,
+                  opt_layout: FlatLayout):
+    """Pull cohort rows ``idx`` (C,) out of the store as stacked (C, ...)
+    D/optimizer trees — the exact layout the round bodies consume."""
+    ds = d_layout.unflatten_stacked(store.d_flat[idx])
+    opts = opt_layout.unflatten_stacked(store.opt_flat[idx])
+    return ds, opts
+
+
+def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
+                   d_layout: FlatLayout, opt_layout: FlatLayout) -> CohortStore:
+    """Write updated cohort slices back into the store (row replacement —
+    values land bit-exactly) and stamp the members' ``last_round``."""
+    return CohortStore(
+        d_flat=store.d_flat.at[idx].set(d_layout.flatten_stacked(ds)),
+        opt_flat=store.opt_flat.at[idx].set(
+            opt_layout.flatten_stacked(d_opts)),
+        last_round=store.last_round.at[idx].set(
+            jnp.asarray(round_idx, jnp.int32)))
+
+
+# ---------------------------------------------------------------------------
+# Participation schedulers (host-side: they drive which users' data is
+# sampled, so they must run before device dispatch)
+# ---------------------------------------------------------------------------
+
+def _sched_full(rng, num_users, cohort, rounds, shard_sizes=None):
+    assert cohort == num_users, (
+        f"'full' participation needs cohort == num_users "
+        f"(got C={cohort}, U={num_users})")
+    return np.tile(np.arange(num_users, dtype=np.int32), (rounds, 1))
+
+
+def _sched_uniform(rng, num_users, cohort, rounds, shard_sizes=None):
+    return np.stack([rng.choice(num_users, size=cohort, replace=False)
+                     for _ in range(rounds)]).astype(np.int32)
+
+
+def _sched_round_robin(rng, num_users, cohort, rounds, shard_sizes=None):
+    start = np.arange(rounds, dtype=np.int64)[:, None] * cohort
+    return ((start + np.arange(cohort)) % num_users).astype(np.int32)
+
+
+def _sched_weighted(rng, num_users, cohort, rounds, shard_sizes=None):
+    assert shard_sizes is not None and len(shard_sizes) == num_users, (
+        "'weighted' participation needs per-user shard sizes "
+        "(dataset.meta['shard_sizes'])")
+    p = np.asarray(shard_sizes, np.float64)
+    p = p / p.sum()
+    return np.stack([rng.choice(num_users, size=cohort, replace=False, p=p)
+                     for _ in range(rounds)]).astype(np.int32)
+
+
+SCHEDULERS = {"full": _sched_full, "uniform": _sched_uniform,
+              "round_robin": _sched_round_robin, "weighted": _sched_weighted}
+
+
+def make_schedule(participation: str, num_users: int, cohort: int,
+                  rounds: int, rng: np.random.Generator,
+                  shard_sizes=None) -> np.ndarray:
+    """(rounds, C) int32 cohort membership; every row is replacement-free
+    (a user appears at most once per round, so scatter rows never collide)."""
+    assert 1 <= cohort <= num_users, (cohort, num_users)
+    sched = SCHEDULERS[participation](rng, num_users, cohort, rounds,
+                                      shard_sizes)
+    assert sched.shape == (rounds, cohort)
+    return sched
 
 
 # ---------------------------------------------------------------------------
@@ -190,8 +300,62 @@ def combine_masked_mean(deltas_stacked):
     return jax.tree.map(one, deltas_stacked)
 
 
+def _age_weights(ages, decay: float, lead_shape):
+    """(C,) participation ages -> broadcastable decay weights.
+
+    age 0 (the user trained on the current server point) weighs 1; each
+    round of staleness multiplies by ``decay``.  Under partial
+    participation a cohort member may not have trained since round
+    ``last_round``, so its delta is w.r.t. an old server point — aging it
+    down is the classic staleness correction for async/partial FL."""
+    w = jnp.asarray(decay, jnp.float32) ** ages.astype(jnp.float32)
+    return jnp.reshape(w, w.shape + (1,) * (len(lead_shape) - 1))
+
+
+def combine_staleness_mean(deltas_stacked, ages=None, decay: float = 0.5):
+    """Staleness-weighted mean: each user's delta is discounted by
+    ``decay**age`` and the weights are renormalized.  With ``ages=None``
+    (or all-zero ages) this is exactly ``combine_mean``.
+
+    The weights are normalized, so they are computed relative to the
+    YOUNGEST cohort member (``decay**(age - min(age))``) — mathematically
+    identical, but immune to ``decay**age`` underflowing to f32 zero for
+    uniformly old cohorts (ages of hundreds of rounds are routine at
+    large U/C ratios), which would otherwise yield 0/0 = NaN."""
+
+    if ages is not None:
+        ages = ages - jnp.min(ages)
+
+    def one(d):
+        if ages is None:
+            return jnp.mean(d, axis=0)
+        w = _age_weights(ages, decay, d.shape)
+        return jnp.sum(w * d, axis=0) / jnp.sum(w, axis=0)
+
+    return jax.tree.map(one, deltas_stacked)
+
+
+def combine_staleness_max_abs(deltas_stacked, ages=None, decay: float = 0.5):
+    """Paper's argmax-|.| fold with stale users handicapped: deltas are
+    scaled by ``decay**age`` BEFORE the magnitude competition, so a fresh
+    small delta can beat a stale large one.  ``ages=None`` degenerates to
+    ``combine_max_abs`` on the scaled==unscaled deltas."""
+
+    def one(d):
+        scaled = d if ages is None else _age_weights(ages, decay, d.shape) * d
+        idx = jnp.argmax(jnp.abs(scaled), axis=0, keepdims=True)
+        return jnp.take_along_axis(scaled, idx, axis=0)[0]
+
+    return jax.tree.map(one, deltas_stacked)
+
+
+combine_staleness_mean.needs_ages = True
+combine_staleness_max_abs.needs_ages = True
+
 COMBINERS = {"max_abs": combine_max_abs, "mean": combine_mean,
-             "masked_mean": combine_masked_mean}
+             "masked_mean": combine_masked_mean,
+             "staleness_mean": combine_staleness_mean,
+             "staleness_max_abs": combine_staleness_max_abs}
 
 
 # ---------------------------------------------------------------------------

@@ -1,7 +1,8 @@
 """Round orchestration for Distributed-GAN training: host-side data
-sampling per user, the scan-fused round engine (default) or the legacy
-per-step jit loop, metric/timing capture, and the paper's evaluation
-criteria (mode coverage, loss trend, wall-clock).
+sampling per user, participation scheduling (which logical users train
+each round), the scan-fused round engine (default) or the legacy per-step
+jit loop, metric/timing capture, and the paper's evaluation criteria
+(mode coverage, loss trend, wall-clock).
 """
 
 from __future__ import annotations
@@ -16,7 +17,10 @@ import jax.numpy as jnp
 
 from repro.core.approaches import (DistGANConfig, DistGANState,
                                    STEP_FACTORIES, init_state)
-from repro.core.engine import DEFAULT_ROUNDS_PER_JIT, make_engine
+from repro.core.engine import (DEFAULT_ROUNDS_PER_JIT, cohort_state_to_full,
+                               init_cohort_state, make_cohort_engine,
+                               make_engine)
+from repro.core.federated import make_schedule
 from repro.data.federated import FederatedDataset
 
 
@@ -25,10 +29,65 @@ from repro.data.federated import FederatedDataset
 _STAGE_CAP_BYTES = 256 * 1024 * 1024
 
 
+def _chunk_slice(staged, start: int, k: int, rpj: int):
+    """Device-side chunk ``[start, start+k)`` of a pre-staged round stack,
+    padded to ``rpj`` rounds by repeating the final round (padded rounds
+    are masked out and never touch the carry)."""
+    out = jax.lax.slice_in_dim(staged, start, start + k)
+    if k < rpj:
+        fill = jnp.broadcast_to(staged[-1:], (rpj - k,) + staged.shape[1:])
+        out = jnp.concatenate([out, fill], axis=0)
+    return out
+
+
+def _chunk_stack(batch_fn, start: int, k: int, rpj: int):
+    """Host-side chunk: sample rounds ``[start, start+k)``, pad to rpj."""
+    block = np.stack([batch_fn(j) for j in range(start, start + k)])
+    if k < rpj:
+        block = np.concatenate(
+            [block,
+             np.broadcast_to(block[-1:], (rpj - k,) + block.shape[1:])], 0)
+    return jnp.asarray(block)
+
+
+def _valid_mask(k: int, rpj: int):
+    return jnp.asarray(np.arange(rpj) < k)
+
+
+def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
+    """Warmup + timed chunk loop shared by the fused and cohort drivers.
+
+    Every chunk is rpj rounds (padded + masked), so the whole run shares
+    ONE compiled program.  Returns ``(carry, chunks, compile_s, steady_s,
+    window_rates)``; ``window_rates`` holds per-round seconds of each
+    FULL post-warmup window — the remainder window is excluded because
+    its rate would over-count the masked padding rounds it still
+    computes."""
+    t0 = time.perf_counter()
+    carry, m0 = run_chunk(0, rpj, carry)
+    compile_s = time.perf_counter() - t0
+    chunks = [m0]
+
+    t1 = time.perf_counter()
+    i = rpj
+    window_rates = []
+    while i < steps:
+        k = min(rpj, steps - i)
+        tc = time.perf_counter()
+        carry, m = run_chunk(i, k, carry)
+        if k == rpj:
+            window_rates.append((time.perf_counter() - tc) / k)
+        chunks.append(m)
+        i += k
+    jax.block_until_ready(carry.g)
+    steady = time.perf_counter() - t1
+    return carry, chunks, compile_s, steady, window_rates
+
+
 @dataclasses.dataclass
 class RunResult:
     g_losses: np.ndarray           # (steps,)
-    d_losses: np.ndarray           # (steps, U)
+    d_losses: np.ndarray           # (steps, U) — (steps, C) under cohorting
     wall_time_s: float
     step_time_s: float             # steady-state per-step (post-compile)
     samples: np.ndarray | None
@@ -48,6 +107,8 @@ def run_distgan(
     sample_fn: Callable | None = None,
     engine: str = "fused",
     rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT,
+    participation: str = "full",
+    cohort_size: int | None = None,
 ) -> RunResult:
     """Train with one of {approach1, approach2, approach3, baseline}.
 
@@ -57,14 +118,37 @@ def run_distgan(
     legacy Python loop — one jit call and one host sync per round; both
     produce bit-identical metric trajectories for a given seed (pinned in
     tests/test_engine.py).
+
+    ``participation`` / ``cohort_size`` virtualize the user axis: the run
+    has ``fcfg.num_users`` LOGICAL users but each round only a scheduled
+    cohort of C users trains, and the compiled program is shaped by C
+    alone (repro.core.engine.make_cohort_engine).  Schedulers: ``full``
+    (everyone, C == U), ``uniform`` / ``weighted`` (random replacement-
+    free draws, the latter ∝ shard size), ``round_robin``.  Setting
+    ``cohort_size`` routes through the cohort engine even for
+    ``participation="full"`` — with C == U that trajectory is bit-
+    identical to the plain fused engine (pinned in tests/test_engine.py).
+    ``extra`` gains per-user ``participation_counts`` and final
+    ``staleness`` (rounds since each user last trained).
     """
     assert approach in STEP_FACTORIES, approach
     assert engine in ("fused", "per_step"), engine
-    state = init_state(pair, fcfg, jax.random.key(seed),
-                       sync_ds=(approach == "approach1"))
     rng = np.random.default_rng(seed)
 
     U, B = fcfg.num_users, batch_size
+
+    cohort_virtual = cohort_size is not None or participation != "full"
+    if cohort_virtual:
+        assert approach != "baseline", \
+            "baseline has no user axis to virtualize"
+        assert engine == "fused", "cohort virtualization needs the " \
+            "scan-fused engine (per_step compiles per-U programs)"
+        return _run_cohort(pair, fcfg, dataset, approach, steps, B, seed,
+                           eval_samples, rounds_per_jit, participation,
+                           cohort_size or U, rng)
+
+    state = init_state(pair, fcfg, jax.random.key(seed),
+                       sync_ds=(approach == "approach1"))
 
     def batch_np(step_i: int):
         if approach == "baseline":
@@ -77,10 +161,10 @@ def run_distgan(
 
         # short runs: shrink the chunk so at least one post-warmup window
         # exists (otherwise all rounds land in the compile chunk and
-        # step_time_s degenerates to ~0); also avoids a remainder-shape
-        # recompile when steps < 2*rounds_per_jit
+        # step_time_s degenerates to ~0)
         if steps > 1:
             rounds_per_jit = max(1, min(rounds_per_jit, steps // 2))
+        rpj = min(rounds_per_jit, steps)
 
         # Pre-stage the whole run on device when it fits (one transfer,
         # chunks become device slices); otherwise sample/transfer chunk by
@@ -95,39 +179,19 @@ def run_distgan(
                                            for j in range(steps)]))
 
         def run_chunk(start: int, k: int, state):
-            if prestage:
-                reals = jax.lax.slice_in_dim(staged, start, start + k)
-            else:
-                reals = jnp.asarray(np.stack(
-                    [batch_np(j) for j in range(start, start + k)]))
-            state, m = eng(state, reals)
-            return state, jax.tree.map(np.asarray, m)   # one sync per chunk
+            reals = (_chunk_slice(staged, start, k, rpj) if prestage
+                     else _chunk_stack(batch_np, start, k, rpj))
+            state, m = eng(state, reals, _valid_mask(k, rpj))
+            # one sync per chunk; padded rounds sliced off
+            return state, jax.tree.map(lambda x: np.asarray(x)[:k], m)
 
-        # warmup/compile on the first chunk's shapes
-        k0 = min(rounds_per_jit, steps)
-        t0 = time.perf_counter()
-        state, m0 = run_chunk(0, k0, state)
-        compile_s = time.perf_counter() - t0
-        chunks = [m0]
-
-        t1 = time.perf_counter()
-        i = k0
-        window_rates = []   # per-round seconds of each post-warmup chunk
-        while i < steps:
-            k = min(rounds_per_jit, steps - i)
-            tc = time.perf_counter()
-            state, m = run_chunk(i, k, state)
-            if k == rounds_per_jit:   # remainder chunk recompiles; skip it
-                window_rates.append((time.perf_counter() - tc) / k)
-            chunks.append(m)
-            i += k
-        jax.block_until_ready(state.g)
-        steady = time.perf_counter() - t1
+        state, chunks, compile_s, steady, window_rates = _drive_chunks(
+            run_chunk, state, steps, rpj)
 
         g_losses = np.concatenate([c["g_loss"] for c in chunks])
         d_losses = np.concatenate([c["d_loss"] for c in chunks])
         kept_frac = float(chunks[-1]["kept_frac"][-1])
-        step_denom = max(steps - k0, 1)
+        step_denom = max(steps - rpj, 1)
         min_step_s = min(window_rates) if window_rates else steady / step_denom
     else:
         # legacy loop, kept verbatim as the comparison target: per-round
@@ -184,6 +248,87 @@ def run_distgan(
                # best post-warmup window: steady-state per-round time,
                # robust to background load spikes (benchmarks use this)
                "min_step_time_s": min_step_s},
+    )
+
+
+def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
+                approach: str, steps: int, B: int, seed: int,
+                eval_samples: int, rounds_per_jit: int, participation: str,
+                cohort_size: int, rng: np.random.Generator) -> RunResult:
+    """Cohort-virtualized run: U logical users, a C-wide compiled program.
+
+    The schedule is drawn from a SEPARATE rng stream so that data sampling
+    consumes ``rng`` exactly as the full-participation path does — with
+    ``participation="full"`` and C == U the cohort trajectory is therefore
+    bit-identical to the plain fused engine (pinned in tests/test_engine).
+    """
+    U, C = fcfg.num_users, cohort_size
+    shard_sizes = None
+    if isinstance(dataset.meta, dict):
+        shard_sizes = dataset.meta.get("shard_sizes")
+    sched_rng = np.random.default_rng([seed, 0x5EED])
+    schedule = make_schedule(participation, U, C, steps, sched_rng,
+                             shard_sizes)
+
+    cstate = init_cohort_state(pair, fcfg, jax.random.key(seed),
+                               sync_ds=(approach == "approach1"))
+    eng = make_cohort_engine(pair, fcfg, approach)
+
+    if steps > 1:
+        rounds_per_jit = max(1, min(rounds_per_jit, steps // 2))
+    rpj = min(rounds_per_jit, steps)
+
+    def batch_round(r: int):
+        return np.stack([np.asarray(dataset.user_batch(int(u), rng, B))
+                         for u in schedule[r]])
+
+    saved_rng, rng = rng, np.random.default_rng(seed)  # throwaway rng
+    probe = batch_round(0)
+    rng = saved_rng
+    prestage = steps * probe.nbytes <= _STAGE_CAP_BYTES
+    if prestage:
+        staged = jnp.asarray(np.stack([batch_round(j)
+                                       for j in range(steps)]))
+    sched_dev = jnp.asarray(schedule)
+
+    def run_chunk(start: int, k: int, cstate):
+        reals = (_chunk_slice(staged, start, k, rpj) if prestage
+                 else _chunk_stack(batch_round, start, k, rpj))
+        idx = _chunk_slice(sched_dev, start, k, rpj)
+        cstate, m = eng(cstate, reals, idx, _valid_mask(k, rpj))
+        return cstate, jax.tree.map(lambda x: np.asarray(x)[:k], m)
+
+    cstate, chunks, compile_s, steady, window_rates = _drive_chunks(
+        run_chunk, cstate, steps, rpj)
+
+    g_losses = np.concatenate([c["g_loss"] for c in chunks])
+    d_losses = np.concatenate([c["d_loss"] for c in chunks])
+    mean_age = np.concatenate([c["mean_age"] for c in chunks])
+    kept_frac = float(chunks[-1]["kept_frac"][-1])
+    step_denom = max(steps - rpj, 1)
+    min_step_s = min(window_rates) if window_rates else steady / step_denom
+
+    samples = None
+    if eval_samples:
+        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
+        samples = np.asarray(pair.g_apply(cstate.g, z))
+
+    counts = np.bincount(schedule.ravel(), minlength=U)
+    staleness = steps - np.asarray(cstate.store.last_round)
+    return RunResult(
+        g_losses=g_losses,
+        d_losses=d_losses,
+        wall_time_s=compile_s + steady,
+        step_time_s=steady / step_denom,
+        samples=samples,
+        state=cohort_state_to_full(pair, fcfg, cstate),
+        extra={"compile_s": compile_s, "kept_frac": kept_frac,
+               "engine": "fused", "min_step_time_s": min_step_s,
+               "participation": participation, "cohort_size": C,
+               "schedule": schedule,
+               "participation_counts": counts,
+               "staleness": staleness,
+               "mean_age": mean_age},
     )
 
 

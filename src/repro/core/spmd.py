@@ -25,8 +25,9 @@ from jax.sharding import PartitionSpec as PS
 
 from repro.core import losses
 from repro.core.approaches import (DistGANConfig, DistGANState,
-                                   d_flat_layout)
-from repro.core.federated import (combine_max_abs_spmd, combine_mean_spmd,
+                                   d_flat_layout, d_opt_flat_layout)
+from repro.core.federated import (CohortStore, combine_max_abs_spmd,
+                                  combine_mean_spmd,
                                   combine_shared_random_flat_spmd,
                                   select_delta_flat)
 from repro.optim import adamw, apply_updates
@@ -70,13 +71,21 @@ def _specs_for(state: DistGANState, mesh):
         step=PS(), key=PS())
 
 
-def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
+def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
+                   width: int | None = None):
     """The per-round SPMD function ``body(state, real) -> (state, metrics)``
     as run INSIDE shard_map (one user per 'users'-axis slice).  Scan-able:
     the fused engine rolls K of these into one program
-    (repro.core.engine.make_spmd_engine)."""
+    (repro.core.engine.make_spmd_engine).
+
+    ``width`` is the number of slices on the mesh axis — ``num_users``
+    for the classic one-user-per-device layout, the cohort size C for the
+    cohort-virtualized layout (repro.core.engine.make_spmd_cohort_engine).
+    The optional third body argument ``age`` is this shard's scalar
+    participation age, consumed only by the staleness-aware folds."""
     g_opt_def, d_opt_def = _opts(fcfg)
     layout = d_flat_layout(pair)
+    width = fcfg.num_users if width is None else width
 
     def local_d_update(d, opt, real, fake):
         def loss_fn(dp):
@@ -86,7 +95,7 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
         updates, opt = d_opt_def.update(grads, opt, d)
         return apply_updates(d, updates), opt, loss
 
-    def body(state: DistGANState, real):
+    def body(state: DistGANState, real, age=None):
         key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
         my_real = real[0]                     # this shard's private slice
@@ -110,9 +119,30 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
                 masked, kept = select_delta_flat(
                     delta, fcfg.selection, frac=fcfg.upload_frac, key=ksel,
                     use_kernel=fcfg.use_topk_kernel)
-                comb = (combine_max_abs_spmd(masked, AXIS)
-                        if fcfg.combiner == "max_abs"
-                        else combine_mean_spmd(masked, AXIS))
+                if fcfg.combiner.startswith("staleness"):
+                    # age-discount the shard's delta BEFORE the fold (the
+                    # SPMD analogue of COMBINERS['staleness_*'])
+                    decay = jnp.asarray(fcfg.staleness_decay, jnp.float32)
+                    if fcfg.combiner == "staleness_mean":
+                        # ages relative to the youngest member, as in
+                        # combine_staleness_mean: the weights are
+                        # normalized anyway, and absolute decay**age
+                        # underflows to 0/0 NaN for uniformly old cohorts
+                        if age is None:
+                            w = jnp.float32(1.0)
+                        else:
+                            a = age.astype(jnp.float32)
+                            w = decay ** (a - jax.lax.pmin(a, AXIS))
+                        comb = (jax.lax.psum(w * masked, AXIS)
+                                / jax.lax.psum(w, AXIS))
+                    else:  # staleness_max_abs
+                        w = (jnp.float32(1.0) if age is None else
+                             decay ** age.astype(jnp.float32))
+                        comb = combine_max_abs_spmd(w * masked, AXIS)
+                else:
+                    comb = (combine_max_abs_spmd(masked, AXIS)
+                            if fcfg.combiner == "max_abs"
+                            else combine_mean_spmd(masked, AXIS))
             server_flat = (layout.flatten(state.server_d)
                            + fcfg.server_scale * comb)
             server_d = layout.unflatten(server_flat)
@@ -146,10 +176,11 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
             metrics["kept_frac"] = jnp.float32(1.0)
 
         elif approach == "approach3":
-            # Round-robin: in sub-round j only user j's D trains and only
-            # user j's D drives the G update; the G grad is broadcast from
-            # shard j via a masked psum.
-            U = fcfg.num_users
+            # Round-robin: in sub-round j only slice j's D trains and only
+            # slice j's D drives the G update; the G grad is broadcast from
+            # shard j via a masked psum.  j ranges over the mesh-axis
+            # width (the cohort, under virtualization).
+            U = width
             me = jax.lax.axis_index(AXIS)
             g, g_opt = state.g, state.g_opt
             gl = jnp.float32(0.0)
@@ -191,6 +222,63 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str):
         return new_state, {"d_loss": dl[None], "g_loss": gl, **metrics}
 
     return body
+
+
+def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
+                           cohort_size: int):
+    """Per-round cohort function as run INSIDE shard_map: each of the C
+    mesh slices hosts ONE cohort member per round.  The (U, N) CohortStore
+    is replicated; a round gathers each shard's scheduled row, runs the
+    standard SPMD body on it, and scatters the updated row back with a
+    one-hot psum + row REPLACEMENT (values land bit-exactly and every
+    replica stays consistent).  Device count bounds C — U only sizes the
+    replicated buffers.
+
+    Scan-able: repro.core.engine.make_spmd_cohort_engine rolls K of these
+    into one program.  Cohort rows are replacement-free by construction
+    (core.federated.make_schedule), so scatter rows never collide.
+    """
+    from repro.core.engine import CohortState
+
+    inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(carry: CohortState, inp):
+        real, idx = inp            # per-shard blocks: (1, B, ...), (1,)
+        store = carry.store
+        u = idx[0]
+        d_row = store.d_flat[u]
+        o_row = store.opt_flat[u]
+        age = carry.step - store.last_round[u]
+        state = DistGANState(
+            carry.g, carry.g_opt,
+            _restack(d_layout.unflatten(d_row)),
+            _restack(o_layout.unflatten(o_row)),
+            carry.server_d, carry.step, carry.key)
+        new_state, metrics = inner(state, real, age)
+
+        new_d = d_layout.flatten(_unstack(new_state.ds))
+        new_o = o_layout.flatten(_unstack(new_state.d_opts))
+        onehot = (jnp.zeros((store.num_users, 1), jnp.float32)
+                  .at[u, 0].set(1.0))
+        part = jax.lax.psum(onehot, AXIS)                    # (U, 1)
+        rows_d = jax.lax.psum(onehot * new_d[None], AXIS)    # (U, Nd)
+        rows_o = jax.lax.psum(onehot * new_o[None], AXIS)    # (U, No)
+        new_store = CohortStore(
+            d_flat=jnp.where(part > 0, rows_d, store.d_flat),
+            opt_flat=jnp.where(part > 0, rows_o, store.opt_flat),
+            last_round=jnp.where(part[:, 0] > 0, carry.step,
+                                 store.last_round))
+        new_carry = CohortState(new_state.g, new_state.g_opt, new_store,
+                                new_state.server_d, new_state.step,
+                                new_state.key)
+        C = jnp.float32(cohort_size)
+        metrics = dict(metrics, mean_age=jax.lax.psum(
+            age.astype(jnp.float32), AXIS) / C)
+        return new_carry, metrics
+
+    return round_fn
 
 
 def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):

@@ -8,10 +8,12 @@ from repro.data.mixtures import (
     make_user_domains,
     digits_like_mixture,
 )
-from repro.data.federated import federated_split, FederatedDataset
+from repro.data.federated import (federated_split, dirichlet_partition,
+                                  quantity_skew_partition, FederatedDataset)
 
 __all__ = [
     "TokenStream", "synthetic_lm_batch", "synthetic_batch_for",
     "GaussianMixture", "make_user_domains", "digits_like_mixture",
-    "federated_split", "FederatedDataset",
+    "federated_split", "dirichlet_partition", "quantity_skew_partition",
+    "FederatedDataset",
 ]

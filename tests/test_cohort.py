@@ -1,0 +1,278 @@
+"""Cohort-virtualized federation tests: non-IID partitioners, the
+CohortStore flat-buffer gather/scatter, participation schedulers, and the
+staleness-aware combiners.  The C == U bitwise pins against the plain
+fused engine live in tests/test_engine.py."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.approaches import (DistGANConfig, d_flat_layout,
+                                   d_opt_flat_layout, init_state)
+from repro.core.federated import (COMBINERS, cohort_gather, cohort_scatter,
+                                  combine_staleness_max_abs,
+                                  combine_staleness_mean, make_cohort_store,
+                                  make_schedule)
+from repro.core.gan import MLPGanConfig, make_mlp_pair
+from repro.core.protocol import run_distgan
+from repro.data.federated import (FederatedDataset, dirichlet_partition,
+                                  quantity_skew_partition)
+from repro.data.mixtures import make_user_domains
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                  d_hidden=32))
+
+
+def _toy_labeled(n=600, n_classes=6):
+    rng = np.random.default_rng(0)
+    labels = rng.integers(0, n_classes, size=n)
+    data = (labels[:, None] + rng.normal(0, 0.1, (n, 3))).astype(np.float32)
+    return data, labels
+
+
+# ---------------------------------------------------------------------------
+# non-IID partitioners
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alpha", [0.05, 0.5, 5.0])
+def test_dirichlet_partition_no_empty_shards_and_meta(alpha):
+    data, labels = _toy_labeled()
+    ds = dirichlet_partition(data, labels, num_users=8, alpha=alpha, seed=3)
+    assert ds.num_users == 8
+    sizes = ds.meta["shard_sizes"]
+    assert len(sizes) == 8 and min(sizes) >= 1
+    assert sum(sizes) == len(data)
+    assert ds.meta["partition"] == "dirichlet"
+    assert ds.meta["alpha"] == alpha
+    # samplers actually draw from non-empty shards
+    rng = np.random.default_rng(0)
+    for u in range(8):
+        assert ds.user_batch(u, rng, 4).shape == (4, 3)
+
+
+def test_dirichlet_partition_deterministic_under_seed():
+    data, labels = _toy_labeled()
+    a = dirichlet_partition(data, labels, 4, alpha=0.3, seed=11)
+    b = dirichlet_partition(data, labels, 4, alpha=0.3, seed=11)
+    c = dirichlet_partition(data, labels, 4, alpha=0.3, seed=12)
+    assert a.meta["shard_sizes"] == b.meta["shard_sizes"]
+    assert a.meta["label_hist"] == b.meta["label_hist"]
+    for u in range(4):
+        np.testing.assert_array_equal(
+            a.user_batch(u, np.random.default_rng(5), 16),
+            b.user_batch(u, np.random.default_rng(5), 16))
+    # a different seed produces a different split (overwhelmingly likely)
+    assert a.meta["shard_sizes"] != c.meta["shard_sizes"]
+
+
+def test_dirichlet_partition_low_alpha_skews_labels():
+    """alpha -> 0 concentrates each class on few users: per-user label
+    histograms must be far from uniform."""
+    data, labels = _toy_labeled(n=1200)
+    ds = dirichlet_partition(data, labels, 4, alpha=0.05, seed=0)
+    hist = np.asarray(ds.meta["label_hist"], np.float64)  # (U, n_classes)
+    frac = hist / np.maximum(hist.sum(0, keepdims=True), 1)
+    # for most classes one user owns the dominant share
+    assert (frac.max(axis=0) > 0.8).mean() > 0.5
+
+
+def test_quantity_skew_partition_sizes_and_determinism():
+    data, _ = _toy_labeled()
+    a = quantity_skew_partition(data, 6, alpha=0.2, seed=7)
+    b = quantity_skew_partition(data, 6, alpha=0.2, seed=7)
+    assert a.meta["shard_sizes"] == b.meta["shard_sizes"]
+    sizes = np.asarray(a.meta["shard_sizes"])
+    assert sizes.sum() == len(data) and sizes.min() >= 1
+    # skew: the largest shard dominates the smallest at low alpha
+    assert sizes.max() > 3 * sizes.min()
+
+
+# ---------------------------------------------------------------------------
+# CohortStore gather/scatter
+# ---------------------------------------------------------------------------
+
+def test_cohort_store_gather_scatter_roundtrip_identity():
+    fcfg = DistGANConfig(num_users=5)
+    st = init_state(PAIR, fcfg, jax.random.key(0))
+    dl, ol = d_flat_layout(PAIR), d_opt_flat_layout(PAIR, fcfg)
+    store = make_cohort_store(st.ds, st.d_opts, dl, ol)
+    assert store.d_flat.shape == (5, dl.n)
+    assert store.opt_flat.shape == (5, ol.n)
+
+    idx = jnp.asarray([3, 0, 4])
+    ds_c, opts_c = cohort_gather(store, idx, dl, ol)
+    # gathered rows == the stacked trees' rows, leaf by leaf
+    for leaf_c, leaf_full in zip(jax.tree.leaves(ds_c),
+                                 jax.tree.leaves(st.ds)):
+        np.testing.assert_array_equal(np.asarray(leaf_c),
+                                      np.asarray(leaf_full)[np.asarray(idx)])
+
+    # scatter the SAME slices back: the store must be bit-identical
+    # (int optimizer leaves included — they round-trip through f32 rows)
+    back = cohort_scatter(store, idx, ds_c, opts_c,
+                          store.last_round[np.asarray(idx)][0], dl, ol)
+    np.testing.assert_array_equal(np.asarray(back.d_flat),
+                                  np.asarray(store.d_flat))
+    np.testing.assert_array_equal(np.asarray(back.opt_flat),
+                                  np.asarray(store.opt_flat))
+
+
+def test_cohort_scatter_touches_only_cohort_rows_and_stamps_round():
+    fcfg = DistGANConfig(num_users=4)
+    st = init_state(PAIR, fcfg, jax.random.key(1))
+    dl, ol = d_flat_layout(PAIR), d_opt_flat_layout(PAIR, fcfg)
+    store = make_cohort_store(st.ds, st.d_opts, dl, ol)
+    idx = jnp.asarray([1, 3])
+    ds_c, opts_c = cohort_gather(store, idx, dl, ol)
+    ds_c = jax.tree.map(lambda x: x + 1.0, ds_c)
+    new = cohort_scatter(store, idx, ds_c, opts_c, jnp.int32(9), dl, ol)
+    d_old = np.asarray(store.d_flat)
+    d_new = np.asarray(new.d_flat)
+    np.testing.assert_array_equal(d_new[[0, 2]], d_old[[0, 2]])
+    np.testing.assert_allclose(d_new[[1, 3]], d_old[[1, 3]] + 1.0,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(new.last_round), [0, 9, 0, 9])
+
+
+# ---------------------------------------------------------------------------
+# participation schedulers
+# ---------------------------------------------------------------------------
+
+def test_schedulers_shapes_and_replacement_free():
+    rng = np.random.default_rng(0)
+    for name in ["uniform", "round_robin", "weighted"]:
+        sched = make_schedule(name, num_users=10, cohort=4, rounds=25,
+                              rng=rng, shard_sizes=list(range(1, 11)))
+        assert sched.shape == (25, 4) and sched.dtype == np.int32
+        assert sched.min() >= 0 and sched.max() < 10
+        for row in sched:               # replacement-free rows
+            assert len(set(row.tolist())) == 4
+
+
+def test_full_scheduler_is_identity_permutation():
+    sched = make_schedule("full", 6, 6, 3, np.random.default_rng(0))
+    np.testing.assert_array_equal(sched, np.tile(np.arange(6), (3, 1)))
+    with pytest.raises(AssertionError):
+        make_schedule("full", 6, 3, 3, np.random.default_rng(0))
+
+
+def test_round_robin_cycles_all_users():
+    sched = make_schedule("round_robin", 8, 2, 8, np.random.default_rng(0))
+    counts = np.bincount(sched.ravel(), minlength=8)
+    np.testing.assert_array_equal(counts, np.full(8, 2))
+
+
+def test_weighted_scheduler_prefers_large_shards():
+    rng = np.random.default_rng(0)
+    sizes = [1, 1, 1, 1, 100, 100]
+    sched = make_schedule("weighted", 6, 2, 200, rng, shard_sizes=sizes)
+    counts = np.bincount(sched.ravel(), minlength=6)
+    assert counts[4] + counts[5] > 0.8 * sched.size
+
+
+# ---------------------------------------------------------------------------
+# staleness-aware combiners
+# ---------------------------------------------------------------------------
+
+def test_staleness_mean_reduces_to_mean_at_zero_age():
+    d = jnp.asarray(np.random.default_rng(0).normal(size=(4, 9)),
+                    jnp.float32)
+    ages = jnp.zeros((4,), jnp.int32)
+    np.testing.assert_allclose(
+        np.asarray(combine_staleness_mean(d, ages, decay=0.5)),
+        np.asarray(jnp.mean(d, axis=0)), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(combine_staleness_mean(d, None)),
+        np.asarray(jnp.mean(d, axis=0)), rtol=1e-6)
+
+
+def test_staleness_mean_downweights_stale_users():
+    d = jnp.stack([jnp.ones((5,)), -jnp.ones((5,))])
+    ages = jnp.asarray([0, 2], jnp.int32)      # user 1 is 2 rounds stale
+    out = np.asarray(combine_staleness_mean(d, ages, decay=0.5))
+    want = (1.0 * 1 + 0.25 * -1) / 1.25
+    np.testing.assert_allclose(out, np.full(5, want), rtol=1e-6)
+
+
+def test_staleness_mean_no_nan_for_uniformly_old_cohorts():
+    """decay**age underflows to f32 zero near age ~150; the weights are
+    computed relative to the youngest member so a uniformly-stale cohort
+    (routine at large U/C) must not produce 0/0 = NaN."""
+    d = jnp.asarray(np.random.default_rng(0).normal(size=(4, 7)),
+                    jnp.float32)
+    ages = jnp.asarray([500, 501, 502, 503], jnp.int32)
+    out = np.asarray(combine_staleness_mean(d, ages, decay=0.5))
+    assert np.all(np.isfinite(out))
+    # shift invariance: same result as the equivalent small ages
+    want = np.asarray(combine_staleness_mean(
+        d, jnp.asarray([0, 1, 2, 3], jnp.int32), decay=0.5))
+    np.testing.assert_allclose(out, want, rtol=1e-6)
+
+
+def test_staleness_max_abs_handicaps_stale_large_delta():
+    # stale user uploads |2.0|, fresh user |1.5|: with decay 0.5 and age 2
+    # the stale entry competes as 0.5 — the fresh one must win
+    d = jnp.asarray([[1.5, 0.0], [2.0, 0.0]], jnp.float32)
+    ages = jnp.asarray([0, 2], jnp.int32)
+    out = np.asarray(combine_staleness_max_abs(d, ages, decay=0.5))
+    assert out[0] == 1.5
+    assert COMBINERS["staleness_max_abs"].needs_ages
+
+
+# ---------------------------------------------------------------------------
+# end-to-end partial participation
+# ---------------------------------------------------------------------------
+
+def _ds(num_users):
+    users, union = make_user_domains(num_users, 2, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample,
+                            {"shard_sizes": [100 * (u + 1)
+                                             for u in range(num_users)]})
+
+
+@pytest.mark.parametrize("participation", ["uniform", "round_robin",
+                                           "weighted"])
+def test_partial_participation_trains_and_reports(participation):
+    U, C = 6, 2
+    ds = _ds(U)
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3,
+                         combiner="staleness_max_abs")
+    r = run_distgan(PAIR, fcfg, ds, "approach1", steps=12, batch_size=16,
+                    seed=0, eval_samples=0, rounds_per_jit=4,
+                    participation=participation, cohort_size=C)
+    assert r.g_losses.shape == (12,)
+    assert r.d_losses.shape == (12, C)
+    assert np.all(np.isfinite(r.g_losses))
+    counts = r.extra["participation_counts"]
+    assert counts.sum() == 12 * C
+    np.testing.assert_array_equal(
+        counts, np.bincount(r.extra["schedule"].ravel(), minlength=U))
+    assert r.extra["staleness"].shape == (U,)
+    assert r.extra["mean_age"].shape == (12,)
+    assert r.extra["cohort_size"] == C
+
+
+def test_cohort_program_width_is_C_not_U():
+    """The compiled cohort program is shaped by C alone: the same engine
+    instance serves runs whose U differs, as long as C matches — i.e. no
+    (U-dependent) retrace beyond the resident buffer shapes."""
+    from repro.core.engine import make_cohort_engine, init_cohort_state
+    C = 2
+    fcfg16 = DistGANConfig(num_users=16, selection="topk", upload_frac=0.3)
+    eng = make_cohort_engine(PAIR, fcfg16, "approach2")
+    rng = np.random.default_rng(0)
+    reals = jnp.asarray(rng.normal(size=(4, C, 8, 2)).astype(np.float32))
+    idx = jnp.asarray(rng.integers(0, 16, size=(4, C)).astype(np.int32))
+    c = init_cohort_state(PAIR, fcfg16, jax.random.key(0))
+    c, m = eng(c, reals, idx)
+    assert np.asarray(m["d_loss"]).shape == (4, C)
+    # traced shapes carry C, not U
+    assert c.store.d_flat.shape[0] == 16
+
+
+def test_baseline_rejects_cohorting():
+    ds = _ds(2)
+    with pytest.raises(AssertionError):
+        run_distgan(PAIR, DistGANConfig(), ds, "baseline", steps=2,
+                    batch_size=8, eval_samples=0, participation="uniform")

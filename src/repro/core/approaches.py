@@ -172,11 +172,13 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
     combiner = COMBINERS[fcfg.combiner]
     layout = d_flat_layout(pair)
 
-    def body(state: DistGANState, real, ages=None):
+    def body(state: DistGANState, real, ages=None, weights=None):
         """real: (C, B, ...) private batches of the participating users
         (C == num_users under full participation); ``ages`` (C,) is each
         member's rounds-since-last-participation, consumed only by the
-        staleness-aware combiners."""
+        staleness-aware combiners; ``weights`` (C,) is an optional
+        per-member combine weight (the participation-adaptive
+        server_scale knob — core.federated.participation_weights)."""
         key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
         U = real.shape[0]
@@ -199,6 +201,11 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
                 for u in range(U)]
         masked = jnp.stack([r[0] for r in rows])           # (C, N)
         kept = jnp.stack([r[1] for r in rows])
+        if weights is not None:
+            # opt-in participation-adaptive combine weight: scale each
+            # member's upload BEFORE the fold (weights are normalized to
+            # mean 1 host-side, so server_scale semantics are preserved)
+            masked = masked * weights[:, None]
         if getattr(combiner, "needs_ages", False):
             combined = combiner(masked, ages, decay=fcfg.staleness_decay)
         else:
@@ -242,7 +249,7 @@ def make_approach2_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def body(state: DistGANState, real, ages=None):
+    def body(state: DistGANState, real, ages=None, weights=None):
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[1]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
@@ -281,7 +288,7 @@ def make_approach3_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def body(state: DistGANState, real, ages=None):
+    def body(state: DistGANState, real, ages=None, weights=None):
         """alg. 3: for each participating user j in turn — train D_j, then
         update G against D_j alone (j ranges over the cohort width)."""
         key = state.key
@@ -331,7 +338,7 @@ def make_baseline_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
 
-    def body(state: DistGANState, real, ages=None):
+    def body(state: DistGANState, real, ages=None, weights=None):
         """real: (B, ...) union-data batch (no privacy; cohorting n/a)."""
         key, kz1, kz2 = jax.random.split(state.key, 3)
         B = real.shape[0]

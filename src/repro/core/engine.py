@@ -41,6 +41,13 @@ Use ``make_engine`` for the host-simulated stacked-user layout and
 ``shard_map``: collectives stay per-round, dispatch is per-chunk);
 ``make_spmd_cohort_engine`` maps the COHORT onto the mesh axis, so the
 device count bounds C — not U.
+
+Streamed residency (``make_cohort_rows_engine`` + ``init_host_backend``):
+the (U, N) store leaves the device entirely — it lives in a host
+``UserStateBackend`` and each round's dispatch consumes only the
+gathered C rows, so U is bounded by host RAM (driven by
+``core.protocol.stream_cohort_rounds``, which double-buffers staging and
+offers async bounded-staleness rounds).
 """
 
 from __future__ import annotations
@@ -52,9 +59,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.approaches import (BODY_FACTORIES, DistGANConfig,
-                                   DistGANState, d_flat_layout,
+                                   DistGANState, _opts, d_flat_layout,
                                    d_opt_flat_layout, init_state)
-from repro.core.federated import (CohortStore, cohort_gather, cohort_scatter,
+from repro.core.federated import (CohortStore, HostStateBackend,
+                                  cohort_gather, cohort_scatter,
                                   make_cohort_store)
 
 DEFAULT_ROUNDS_PER_JIT = 16
@@ -169,15 +177,22 @@ def cohort_state_to_full(pair, fcfg: DistGANConfig,
                         cstate.step, cstate.key)
 
 
-def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
+def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
+                       adaptive: bool = False) -> Callable:
     """Scan-fused cohort engine for the host-simulated layout.
 
-    Returns ``chunk(cstate, reals, idx, valid=None)`` with
+    Returns ``chunk(cstate, reals, idx, wts=None, valid=None)`` with
     ``reals (K, C, B, ...)`` the scheduled cohorts' private batches and
     ``idx (K, C) int32`` the cohort membership per round.  Per round the
     body sees ONLY the gathered C rows — the compiled program is shaped by
     C, while U merely sizes the resident (U, N) buffers (gather/scatter
     touch C rows; XLA updates the donated store in place).
+
+    ``adaptive=True`` additionally scans ``wts (K, C) f32`` — host-derived
+    participation-adaptive combine weights
+    (core.federated.participation_weights) forwarded to the round body.
+    The flag gates the extra input so the default path traces the EXACT
+    program pinned bitwise against the plain fused engine.
     """
     assert approach != "baseline", "baseline has no user axis to virtualize"
     body = BODY_FACTORIES[approach](pair, fcfg)
@@ -185,7 +200,8 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
     o_layout = d_opt_flat_layout(pair, fcfg)
 
     def round_fn(carry: CohortState, inp):
-        real, idx = inp
+        real, idx, *rest = inp
+        w = rest[0] if rest else None
         store = carry.store
         ds, opts = cohort_gather(store, idx, d_layout, o_layout)
         # materialize the gathered slices: without the barrier XLA may fuse
@@ -196,7 +212,7 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
         ages = carry.step - store.last_round[idx]          # (C,) i32
         state = DistGANState(carry.g, carry.g_opt, ds, opts, carry.server_d,
                              carry.step, carry.key)
-        new_state, metrics = body(state, real, ages)
+        new_state, metrics = body(state, real, ages, w)
         # same reasoning on the way out: keep the scatter's flatten from
         # fusing back into the body's update/loss clusters
         nds, nopts = jax.lax.optimization_barrier(
@@ -209,10 +225,13 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
         metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
         return new_carry, metrics
 
-    def chunk(cstate: CohortState, reals, idx, valid=None):
+    def chunk(cstate: CohortState, reals, idx, wts=None, valid=None):
+        assert (wts is not None) == adaptive, \
+            "wts must be supplied iff the engine was built adaptive=True"
+        inp = (reals, idx) if wts is None else (reals, idx, wts)
         if valid is None:
-            return jax.lax.scan(round_fn, cstate, (reals, idx))
-        return jax.lax.scan(_masked(round_fn), cstate, ((reals, idx), valid))
+            return jax.lax.scan(round_fn, cstate, inp)
+        return jax.lax.scan(_masked(round_fn), cstate, (inp, valid))
 
     # NOT donated: in-place scatter into a donated (U, N) carry lets XLA
     # reschedule the update clusters and the trajectory drifts at ULP from
@@ -264,6 +283,129 @@ def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
         return fn(*args)
 
     return jax.jit(chunk)  # not donated — see make_cohort_engine
+
+
+# ---------------------------------------------------------------------------
+# Streamed cohort engine: rows live in a UserStateBackend, not the carry
+# ---------------------------------------------------------------------------
+#
+# The scan-fused cohort engine above keeps the full (U, N) store in its
+# device carry, so U is still bounded by accelerator memory.  The rows
+# engine inverts the residency: the store lives in a host (or device)
+# UserStateBackend, and ONE round's dispatch consumes only the gathered
+# cohort rows — (C, Nd)/(C, No) buffers that crossed the host<->device
+# boundary via jax.device_put.  Only the replicated training state
+# (CohortShared) chains device-side between dispatches, so the driver
+# (core.protocol.stream_cohort_rounds) can overlap round k's compute with
+# round k+1's staging, and — in async bounded-staleness mode — defer
+# round k's scatter-back past round k+1's launch.
+
+class CohortShared(NamedTuple):
+    """Replicated training state carried across streamed rounds.  The
+    per-user rows are NOT here — they live in a UserStateBackend and
+    enter each round as explicit gathered-row arguments."""
+
+    g: jnp.ndarray
+    g_opt: jnp.ndarray
+    server_d: jnp.ndarray
+    step: jnp.ndarray
+    key: jnp.ndarray
+
+
+def make_cohort_rows_engine(pair, fcfg: DistGANConfig,
+                            approach: str) -> Callable:
+    """One-round engine over gathered cohort rows.
+
+    Returns ``round(shared, d_rows, opt_rows, ages, wts, real) ->
+    (shared, new_d_rows, new_opt_rows, metrics)`` with ``d_rows (C, Nd)``
+    / ``opt_rows (C, No)`` the cohort's FlatLayout rows, ``ages (C,)
+    int32`` participation ages, ``wts (C,) f32 | None`` the optional
+    adaptive combine weights, and ``real (C, B, ...)`` the members'
+    private batches.  ``d_rows`` and ``opt_rows`` are donated (they are
+    per-round transfers); the shared carry is not — see the donation
+    note at the jit below.
+
+    The same optimization barriers as ``make_cohort_engine`` pin the
+    body's update clusters, so a synchronous streamed run reproduces the
+    store-carry engine's trajectory to within 1 ULP per round (the scan-
+    embedded and standalone programs still tile a handful of reductions
+    differently — pinned at atol=1e-6 in tests/test_stream.py; the PR 2
+    bitwise contract binds the DEVICE backend, which is untouched).
+    """
+    assert approach != "baseline", "baseline has no user axis to virtualize"
+    body = BODY_FACTORIES[approach](pair, fcfg)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(shared: CohortShared, d_rows, opt_rows, ages, wts, real):
+        ds = d_layout.unflatten_stacked(d_rows)
+        opts = o_layout.unflatten_stacked(opt_rows)
+        ds, opts = jax.lax.optimization_barrier((ds, opts))
+        state = DistGANState(shared.g, shared.g_opt, ds, opts,
+                             shared.server_d, shared.step, shared.key)
+        new_state, metrics = body(state, real, ages, wts)
+        nds, nopts = jax.lax.optimization_barrier(
+            (new_state.ds, new_state.d_opts))
+        new_shared = CohortShared(new_state.g, new_state.g_opt,
+                                  new_state.server_d, new_state.step,
+                                  new_state.key)
+        metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
+        return (new_shared, d_layout.flatten_stacked(nds),
+                o_layout.flatten_stacked(nopts), metrics)
+
+    # rows are donated (fresh per-round transfers; XLA updates them in
+    # place).  The shared carry is NOT: donating it lets XLA reschedule
+    # the G-update clusters and the trajectory drifts at ULP from the
+    # store-carry cohort engine (same effect as the non-donated cohort
+    # carry — see make_cohort_engine).  The per-round copy is one G/opt/
+    # server-D tree, amortized noise next to the round's compute.
+    return jax.jit(round_fn, donate_argnums=(1, 2))
+
+
+def init_host_backend(pair, fcfg: DistGANConfig, key, *,
+                      sync_ds: bool = False, init_chunk: int = 256):
+    """Host-resident analogue of ``init_cohort_state``: returns
+    ``(CohortShared, HostStateBackend)`` with the SAME per-user values as
+    the device path (bit-exact, pinned in tests/test_stream.py) while
+    materializing at most ``init_chunk`` user rows on device at a time —
+    U is bounded by host RAM, never by accelerator memory.
+
+    Key splitting mirrors ``init_state`` exactly (kg -> G + server D,
+    kd -> per-user Ds, kk -> the training key); optimizer rows are the
+    deterministic zero-init, built once and broadcast."""
+    from repro.models.common import build
+
+    kg, kd, ks, kk = jax.random.split(key, 4)
+    g_opt_def, d_opt_def = _opts(fcfg)
+    g, d0 = pair.init(kg)
+    dl = d_flat_layout(pair)
+    ol = d_opt_flat_layout(pair, fcfg)
+    U = fcfg.num_users
+
+    d_flat = np.empty((U, dl.n), np.float32)
+    if sync_ds:
+        d_flat[:] = np.asarray(dl.flatten(d0))[None]
+    else:
+        keys = jax.random.split(kd, U)
+        # eager on purpose: jit-fusing the RNG + flatten re-associates the
+        # sampling transcendentals and drifts from the (eager)
+        # init_user_ds values at ULP — breaking the host==device pin
+        flatten_chunk = lambda ks_: dl.flatten_stacked(
+            jax.vmap(lambda k: build(pair.d_decls, k, jnp.float32))(ks_))
+        for i in range(0, U, init_chunk):
+            d_flat[i:i + init_chunk] = np.asarray(
+                flatten_chunk(keys[i:i + init_chunk]))
+
+    # optimizer init is shape-deterministic (zero moments, step 0): one
+    # row, broadcast host-side
+    o_row = np.asarray(ol.flatten(d_opt_def.init(d0)), np.float32)
+    opt_flat = np.broadcast_to(o_row, (U, ol.n)).copy()
+
+    backend = HostStateBackend(d_flat, opt_flat,
+                               np.zeros((U,), np.int32))
+    shared = CohortShared(g, g_opt_def.init(g), d0,
+                          jnp.zeros((), jnp.int32), kk)
+    return shared, backend
 
 
 # ---------------------------------------------------------------------------

@@ -160,6 +160,122 @@ def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
 
 
 # ---------------------------------------------------------------------------
+# User-state backends: where the (U, N) rows LIVE between rounds
+# ---------------------------------------------------------------------------
+#
+# The CohortStore above is a *representation* (flat rows + last_round); a
+# UserStateBackend decides its residency.  The device backend keeps the
+# buffers in accelerator memory (the PR 2 regime — U bounded by HBM); the
+# host backend keeps them as process-resident NumPy arrays and moves only
+# the scheduled cohort's C rows across the host<->device boundary per
+# round, so U is bounded by host RAM.  Both expose the same contract:
+#
+#   gather_rows(idx)  -> (d_rows (C, Nd), opt_rows (C, No),
+#                         last_round (C,) np.int32)
+#   scatter_rows(idx, d_rows, opt_rows, round_idx) -> None  (mutates)
+#   snapshot()        -> CohortStore (device-resident, for eval/interop)
+#
+# ``last_round`` comes back as host ints because the drivers compute ages
+# host-side before dispatch.  Scatter is last-writer-wins: under the
+# async bounded-staleness driver (core.protocol.stream_cohort_rounds) a
+# round's scatter may land AFTER later rounds launched — the classic
+# async parameter-server semantics, with staleness bounded by the
+# driver's ``async_rounds`` and surfaced through ``last_round`` ages.
+
+class UserStateBackend:
+    """Abstract residency contract for per-user D/optimizer rows."""
+
+    num_users: int
+
+    def gather_rows(self, idx):
+        raise NotImplementedError
+
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+        raise NotImplementedError
+
+    def snapshot(self) -> CohortStore:
+        raise NotImplementedError
+
+
+class DeviceStateBackend(UserStateBackend):
+    """Device-resident rows: a functional CohortStore behind the mutable
+    backend API.  The scan-fused cohort engine keeps the store in its
+    carry instead (faster — no per-round host round-trip); this wrapper
+    exists so the streaming driver can run against either residency."""
+
+    def __init__(self, store: CohortStore):
+        self.store = store
+
+    @property
+    def num_users(self) -> int:
+        return self.store.num_users
+
+    def gather_rows(self, idx):
+        idx = jnp.asarray(idx)
+        # index on DEVICE first: only the C gathered entries cross to the
+        # host, keeping per-round cost independent of U
+        return (self.store.d_flat[idx], self.store.opt_flat[idx],
+                np.asarray(self.store.last_round[idx]))
+
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+        idx = jnp.asarray(idx)
+        self.store = CohortStore(
+            d_flat=self.store.d_flat.at[idx].set(jnp.asarray(d_rows)),
+            opt_flat=self.store.opt_flat.at[idx].set(jnp.asarray(opt_rows)),
+            last_round=self.store.last_round.at[idx].set(
+                jnp.asarray(round_idx, jnp.int32)))
+
+    def snapshot(self) -> CohortStore:
+        return self.store
+
+
+class HostStateBackend(UserStateBackend):
+    """Host-resident rows: pinned process-memory NumPy buffers.  U sizes
+    nothing on the accelerator — per round only C rows are gathered
+    (fancy-index copy) for ``jax.device_put`` and scattered back, so the
+    logical population is bounded by host RAM, not HBM."""
+
+    def __init__(self, d_flat: np.ndarray, opt_flat: np.ndarray,
+                 last_round: np.ndarray):
+        u = d_flat.shape[0]
+        assert opt_flat.shape[0] == u and last_round.shape == (u,)
+
+        def own(a, dt):
+            # jax buffers arrive as read-only views; the store must own
+            # writable memory (scatter mutates in place)
+            a = np.ascontiguousarray(a, dtype=dt)
+            return a if a.flags.writeable else a.copy()
+
+        self.d_flat = own(d_flat, np.float32)
+        self.opt_flat = own(opt_flat, np.float32)
+        self.last_round = own(last_round, np.int32)
+
+    @property
+    def num_users(self) -> int:
+        return self.d_flat.shape[0]
+
+    @classmethod
+    def from_store(cls, store: CohortStore) -> "HostStateBackend":
+        return cls(np.asarray(store.d_flat), np.asarray(store.opt_flat),
+                   np.asarray(store.last_round))
+
+    def gather_rows(self, idx):
+        idx = np.asarray(idx)
+        return (self.d_flat[idx], self.opt_flat[idx], self.last_round[idx])
+
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+        idx = np.asarray(idx)
+        self.d_flat[idx] = np.asarray(d_rows)
+        self.opt_flat[idx] = np.asarray(opt_rows)
+        self.last_round[idx] = np.int32(round_idx)
+
+    def snapshot(self) -> CohortStore:
+        return CohortStore(jnp.asarray(self.d_flat),
+                           jnp.asarray(self.opt_flat),
+                           jnp.asarray(self.last_round))
+
+
+# ---------------------------------------------------------------------------
 # Participation schedulers (host-side: they drive which users' data is
 # sampled, so they must run before device dispatch)
 # ---------------------------------------------------------------------------
@@ -205,6 +321,33 @@ def make_schedule(participation: str, num_users: int, cohort: int,
                                       shard_sizes)
     assert sched.shape == (rounds, cohort)
     return sched
+
+
+def participation_weights(schedule: np.ndarray,
+                          num_users: int) -> np.ndarray:
+    """(rounds, C) f32 adaptive combine weights from participation counts.
+
+    Opt-in fairness knob (``run_distgan(adaptive_server_scale=True)``):
+    under partial participation a user drawn rarely contributes rarely,
+    so its shard is under-represented in the server fold.  Each round,
+    member u's raw weight is ``(expected + 1) / (count_u + 1)`` where
+    ``count_u`` is u's prior participation count and ``expected = r*C/U``
+    is the uniform-scheduler expectation — under-participating users get
+    proportionally LARGER combine weight.  Weights are normalized to mean
+    1 over the cohort, so the server_scale of the fold is preserved (the
+    knob redistributes, it does not amplify).  Deterministic: derived
+    purely from the host-side schedule, so it costs nothing on device
+    beyond a (C,) multiply."""
+    rounds, cohort = schedule.shape
+    counts = np.zeros(num_users, np.float64)
+    out = np.empty((rounds, cohort), np.float32)
+    for r in range(rounds):
+        idx = schedule[r]
+        expected = r * cohort / num_users
+        w = (expected + 1.0) / (counts[idx] + 1.0)
+        out[r] = (w / w.mean()).astype(np.float32)
+        counts[idx] += 1.0
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -428,13 +571,32 @@ def upload_bytes(delta_tree, policy: Selection, frac: float = 0.1, *,
     ``delta_tree`` and ``tau`` directly.
     """
     n = sum(int(jnp.size(l)) for l in jax.tree.leaves(delta_tree))
+    if policy == "threshold" and kept_frac is None:
+        kept = sum(int(jnp.sum(jnp.abs(l) > tau))
+                   for l in jax.tree.leaves(delta_tree))
+        kept_frac = kept / n
+    return upload_bytes_flat(n, policy, frac, kept_frac=kept_frac)
+
+
+def upload_bytes_flat(n: int, policy: Selection | str, frac: float = 0.1, *,
+                      kept_frac: float | None = None) -> int:
+    """Per-user upload bytes from the flat buffer size alone (no delta
+    tree needed — the cohort drivers know only ``FlatLayout.n``).  The
+    ONE pricing table: ``upload_bytes`` delegates here after computing
+    ``n`` (and, for ``threshold``, the kept count) from its delta tree.
+
+    Dense ``none`` ships 4B per entry; sparse ``topk``/``random``/
+    ``threshold`` ship (index, value) pairs at 8B per kept entry
+    (``threshold`` MUST be given the measured ``kept_frac`` — its kept
+    count is data-dependent).  ``shared_random`` ships values only (the
+    mask is derived from a shared per-round key, so no indices cross the
+    wire): 4B per kept entry."""
     if policy == "none":
         return 4 * n
     if policy == "threshold":
-        if kept_frac is None:
-            kept = sum(int(jnp.sum(jnp.abs(l) > tau))
-                       for l in jax.tree.leaves(delta_tree))
-        else:
-            kept = int(round(n * float(kept_frac)))
-        return kept * 8
+        assert kept_frac is not None, \
+            "threshold accounting needs the measured kept_frac"
+        return int(round(n * float(kept_frac))) * 8
+    if policy == "shared_random":
+        return max(int(n * frac), 1) * 4
     return int(n * frac) * 8

@@ -3,12 +3,22 @@ sampling per user, participation scheduling (which logical users train
 each round), the scan-fused round engine (default) or the legacy per-step
 jit loop, metric/timing capture, and the paper's evaluation criteria
 (mode coverage, loss trend, wall-clock).
+
+Two residencies for the per-user state: the device-backed cohort path
+carries the (U, N) store through the scan (U bounded by accelerator
+memory), and the host-backed streamed path (``state_backend="host"``)
+keeps the store in pinned host buffers, moving only the scheduled
+cohort's C rows per round through ``stream_cohort_rounds`` — a
+double-buffered driver with an optional async bounded-staleness mode
+(``async_rounds``).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
+import typing
 from typing import Callable
 
 import numpy as np
@@ -16,11 +26,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.approaches import (DistGANConfig, DistGANState,
-                                   STEP_FACTORIES, init_state)
-from repro.core.engine import (DEFAULT_ROUNDS_PER_JIT, cohort_state_to_full,
-                               init_cohort_state, make_cohort_engine,
+                                   STEP_FACTORIES, d_flat_layout, init_state)
+from repro.core.engine import (CohortState, DEFAULT_ROUNDS_PER_JIT,
+                               _pad_to, cohort_state_to_full,
+                               init_cohort_state, init_host_backend,
+                               make_cohort_engine, make_cohort_rows_engine,
                                make_engine)
-from repro.core.federated import make_schedule
+from repro.core.federated import (make_schedule, participation_weights,
+                                  upload_bytes_flat)
 from repro.data.federated import FederatedDataset
 
 
@@ -41,12 +54,10 @@ def _chunk_slice(staged, start: int, k: int, rpj: int):
 
 
 def _chunk_stack(batch_fn, start: int, k: int, rpj: int):
-    """Host-side chunk: sample rounds ``[start, start+k)``, pad to rpj."""
-    block = np.stack([batch_fn(j) for j in range(start, start + k)])
-    if k < rpj:
-        block = np.concatenate(
-            [block,
-             np.broadcast_to(block[-1:], (rpj - k,) + block.shape[1:])], 0)
+    """Host-side chunk: sample rounds ``[start, start+k)``, pad to rpj
+    (same repeat-the-last-round convention as engine._pad_to)."""
+    block = _pad_to(np.stack([batch_fn(j) for j in range(start, start + k)]),
+                    rpj)
     return jnp.asarray(block)
 
 
@@ -109,6 +120,11 @@ def run_distgan(
     rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT,
     participation: str = "full",
     cohort_size: int | None = None,
+    state_backend: str = "device",
+    async_rounds: int = 0,
+    prefetch: bool = True,
+    adaptive_server_scale: bool = False,
+    materialize_state: bool = True,
 ) -> RunResult:
     """Train with one of {approach1, approach2, approach3, baseline}.
 
@@ -130,22 +146,69 @@ def run_distgan(
     identical to the plain fused engine (pinned in tests/test_engine.py).
     ``extra`` gains per-user ``participation_counts`` and final
     ``staleness`` (rounds since each user last trained).
+
+    ``state_backend`` picks where the per-user rows live between rounds:
+    ``"device"`` (default) carries the (U, N) CohortStore through the
+    scan — U bounded by accelerator memory, PR 2's regime; ``"host"``
+    keeps the store in pinned host NumPy buffers and STREAMS only the
+    scheduled cohort's C rows to device per round (U bounded by host
+    RAM).  The host driver double-buffers: round k+1's data chunk (and,
+    in async mode, its cohort rows) are staged via ``jax.device_put``
+    while round k computes; ``prefetch=False`` disables the overlap (the
+    perf-neutral knob the ``paper_stream`` benchmark gates against).
+    ``async_rounds=S > 0`` (host backend only) additionally lets round
+    k's scatter-back land up to S rounds late — bounded-staleness
+    asynchrony, with the lag surfaced through the ``last_round`` ages the
+    staleness-aware combiners consume.
+
+    ``adaptive_server_scale=True`` (approach 1, cohort runs) scales each
+    cohort member's uploaded delta by a participation-adaptive weight
+    (under-participating users count proportionally more; weights are
+    mean-1 normalized per round — core.federated.participation_weights).
+
+    ``materialize_state=False`` (host backend) skips unpacking the final
+    store into the stacked ``RunResult.state`` — that unpack puts the
+    whole (U, N) store on DEVICE, which defeats host residency exactly
+    when U is large enough to need it.  The run's state stays reachable
+    through ``extra["host_backend"]`` (gather rows, or ``.snapshot()``
+    on demand) and ``RunResult.state`` is None.
     """
     assert approach in STEP_FACTORIES, approach
     assert engine in ("fused", "per_step"), engine
+    assert state_backend in ("device", "host"), state_backend
+    assert async_rounds >= 0
+    if async_rounds:
+        assert state_backend == "host", \
+            "async_rounds needs state_backend='host' (the scan-compiled " \
+            "device path is synchronous by construction)"
+    if not materialize_state:
+        assert state_backend == "host", \
+            "materialize_state=False is a host-backend knob (the device " \
+            "backend's store is already device-resident)"
     rng = np.random.default_rng(seed)
 
     U, B = fcfg.num_users, batch_size
 
-    cohort_virtual = cohort_size is not None or participation != "full"
+    cohort_virtual = (cohort_size is not None or participation != "full"
+                      or state_backend == "host")
+    if adaptive_server_scale:
+        assert cohort_virtual and approach == "approach1", \
+            "adaptive_server_scale is an approach-1 combiner option " \
+            "(cohort runs)"
     if cohort_virtual:
         assert approach != "baseline", \
             "baseline has no user axis to virtualize"
         assert engine == "fused", "cohort virtualization needs the " \
             "scan-fused engine (per_step compiles per-U programs)"
+        if state_backend == "host":
+            return _run_cohort_host(pair, fcfg, dataset, approach, steps, B,
+                                    seed, eval_samples, participation,
+                                    cohort_size or U, rng, async_rounds,
+                                    prefetch, adaptive_server_scale,
+                                    materialize_state)
         return _run_cohort(pair, fcfg, dataset, approach, steps, B, seed,
                            eval_samples, rounds_per_jit, participation,
-                           cohort_size or U, rng)
+                           cohort_size or U, rng, adaptive_server_scale)
 
     state = init_state(pair, fcfg, jax.random.key(seed),
                        sync_ds=(approach == "approach1"))
@@ -191,6 +254,8 @@ def run_distgan(
         g_losses = np.concatenate([c["g_loss"] for c in chunks])
         d_losses = np.concatenate([c["d_loss"] for c in chunks])
         kept_frac = float(chunks[-1]["kept_frac"][-1])
+        kept_mean = float(np.mean(np.concatenate([c["kept_frac"]
+                                                  for c in chunks])))
         step_denom = max(steps - rpj, 1)
         min_step_s = min(window_rates) if window_rates else steady / step_denom
     else:
@@ -228,6 +293,7 @@ def run_distgan(
         g_losses = np.asarray(g_list)
         d_losses = np.stack(d_list)
         kept_frac = float(metrics["kept_frac"])
+        kept_mean = kept_frac  # per-step loop tracks only the final round
         step_denom = max(steps - 1, 1)
         min_step_s = min(round_times) if round_times else steady
 
@@ -247,32 +313,58 @@ def run_distgan(
                "engine": engine,
                # best post-warmup window: steady-state per-round time,
                # robust to background load spikes (benchmarks use this)
-               "min_step_time_s": min_step_s},
+               "min_step_time_s": min_step_s,
+               # full participation: the per-round cohort is all U users
+               **_upload_accounting(pair, fcfg, approach, U, kept_mean)},
     )
+
+
+def _cohort_schedule(dataset, participation: str, U: int, C: int,
+                     steps: int, seed: int) -> np.ndarray:
+    """The cohort membership schedule, drawn from a SEPARATE rng stream so
+    that data sampling consumes the caller's ``rng`` exactly as the
+    full-participation path does — with ``participation="full"`` and
+    C == U the cohort trajectory is therefore bit-identical to the plain
+    fused engine (pinned in tests/test_engine)."""
+    shard_sizes = None
+    if isinstance(dataset.meta, dict):
+        shard_sizes = dataset.meta.get("shard_sizes")
+    sched_rng = np.random.default_rng([seed, 0x5EED])
+    return make_schedule(participation, U, C, steps, sched_rng, shard_sizes)
+
+
+def _upload_accounting(pair, fcfg: DistGANConfig, approach: str, C: int,
+                       kept_frac: float) -> dict:
+    """Cohort-aware per-round upload bytes: C members upload per round —
+    NOT the full population U.  Only approach 1 ships parameter deltas
+    across the privacy boundary; approaches 2/3 exchange logits/gradients
+    and the baseline nothing, so the key is absent there.  For the
+    data-dependent ``threshold`` policy, pass the RUN-MEAN measured kept
+    fraction (a single round's value misprices a drifting threshold)."""
+    if approach != "approach1":
+        return {}
+    n = d_flat_layout(pair).n
+    kf = kept_frac if fcfg.selection == "threshold" else None
+    per_user = upload_bytes_flat(n, fcfg.selection, fcfg.upload_frac,
+                                 kept_frac=kf)
+    return {"upload_bytes_per_user": per_user,
+            "upload_bytes_per_round": C * per_user}
 
 
 def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
                 approach: str, steps: int, B: int, seed: int,
                 eval_samples: int, rounds_per_jit: int, participation: str,
-                cohort_size: int, rng: np.random.Generator) -> RunResult:
-    """Cohort-virtualized run: U logical users, a C-wide compiled program.
-
-    The schedule is drawn from a SEPARATE rng stream so that data sampling
-    consumes ``rng`` exactly as the full-participation path does — with
-    ``participation="full"`` and C == U the cohort trajectory is therefore
-    bit-identical to the plain fused engine (pinned in tests/test_engine).
-    """
+                cohort_size: int, rng: np.random.Generator,
+                adaptive: bool = False) -> RunResult:
+    """Cohort-virtualized run: U logical users, a C-wide compiled program
+    (see ``_cohort_schedule`` for the rng-stream discipline)."""
     U, C = fcfg.num_users, cohort_size
-    shard_sizes = None
-    if isinstance(dataset.meta, dict):
-        shard_sizes = dataset.meta.get("shard_sizes")
-    sched_rng = np.random.default_rng([seed, 0x5EED])
-    schedule = make_schedule(participation, U, C, steps, sched_rng,
-                             shard_sizes)
+    schedule = _cohort_schedule(dataset, participation, U, C, steps, seed)
+    wts = participation_weights(schedule, U) if adaptive else None
 
     cstate = init_cohort_state(pair, fcfg, jax.random.key(seed),
                                sync_ds=(approach == "approach1"))
-    eng = make_cohort_engine(pair, fcfg, approach)
+    eng = make_cohort_engine(pair, fcfg, approach, adaptive=adaptive)
 
     if steps > 1:
         rounds_per_jit = max(1, min(rounds_per_jit, steps // 2))
@@ -290,12 +382,14 @@ def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
         staged = jnp.asarray(np.stack([batch_round(j)
                                        for j in range(steps)]))
     sched_dev = jnp.asarray(schedule)
+    wts_dev = None if wts is None else jnp.asarray(wts)
 
     def run_chunk(start: int, k: int, cstate):
         reals = (_chunk_slice(staged, start, k, rpj) if prestage
                  else _chunk_stack(batch_round, start, k, rpj))
         idx = _chunk_slice(sched_dev, start, k, rpj)
-        cstate, m = eng(cstate, reals, idx, _valid_mask(k, rpj))
+        w = None if wts_dev is None else _chunk_slice(wts_dev, start, k, rpj)
+        cstate, m = eng(cstate, reals, idx, wts=w, valid=_valid_mask(k, rpj))
         return cstate, jax.tree.map(lambda x: np.asarray(x)[:k], m)
 
     cstate, chunks, compile_s, steady, window_rates = _drive_chunks(
@@ -305,6 +399,8 @@ def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
     d_losses = np.concatenate([c["d_loss"] for c in chunks])
     mean_age = np.concatenate([c["mean_age"] for c in chunks])
     kept_frac = float(chunks[-1]["kept_frac"][-1])
+    kept_mean = float(np.mean(np.concatenate([c["kept_frac"]
+                                              for c in chunks])))
     step_denom = max(steps - rpj, 1)
     min_step_s = min(window_rates) if window_rates else steady / step_denom
 
@@ -328,7 +424,204 @@ def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
                "schedule": schedule,
                "participation_counts": counts,
                "staleness": staleness,
-               "mean_age": mean_age},
+               "mean_age": mean_age,
+               "state_backend": "device",
+               "adaptive_server_scale": adaptive,
+               **({"participation_weights": wts} if adaptive else {}),
+               **_upload_accounting(pair, fcfg, approach, C, kept_mean)},
+    )
+
+
+class StreamStats(typing.NamedTuple):
+    retire_t: list    # perf_counter stamp when round r's scatter landed
+    stall_s: list     # host seconds blocked on the device for round r
+
+
+def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
+                         batch_fn: Callable, *, async_rounds: int = 0,
+                         prefetch: bool = True, wts: np.ndarray | None = None):
+    """Double-buffered streaming driver over a rows engine.
+
+    ``eng(shared, d_rows, opt_rows, ages, wts_row, real)`` is dispatched
+    once per round (``make_cohort_rows_engine`` or the SPMD
+    ``make_spmd_cohort_rows_engine`` — same signature); the per-user rows
+    live in ``backend`` (a UserStateBackend) and only the scheduled
+    cohort's C rows cross the host<->device boundary.
+
+    Pipeline structure per round k (JAX dispatch is asynchronous, so the
+    engine call returns immediately and the device computes in the
+    background):
+
+    * ``prefetch=True``: round k+1's data chunk is sampled and
+      ``jax.device_put`` while round k computes — the PR 1 "overlap host
+      staging with device compute" item extended to the streamed store.
+    * ``async_rounds == 0`` (synchronous): round k's updated rows are
+      fetched and scattered back BEFORE round k+1's rows are gathered, so
+      every gather sees a fully up-to-date store.
+    * ``async_rounds == S > 0`` (bounded staleness): up to S rounds may
+      be in flight — round k+1's rows are gathered from the store as-is
+      (round k's scatter may not have landed), so a member's row can be
+      at most S rounds stale.  Scatter is last-writer-wins and
+      ``last_round`` reflects LANDED rounds only, so the ages the
+      staleness-aware combiners see automatically include the pipeline
+      lag.
+
+    Returns ``(shared, metrics, stats)``: per-round metric dicts (host
+    numpy) and a ``StreamStats`` — ``retire_t[r]`` is the perf_counter
+    stamp at which round r's scatter-back landed, ``stall_s[r]`` the
+    host time spent BLOCKED on the device fetching round r's outputs.
+    The stall is the pipeline's figure of merit: synchronous staging
+    must stall for ~the whole device compute every round (the host has
+    nothing else to do), while the double-buffered/async modes stage
+    round k+1 under round k's compute and retire long-finished rounds —
+    stalls collapse toward zero (gated in benchmarks paper_stream).
+    """
+    steps = len(schedule)
+    metrics_out: list = [None] * steps
+    stats = StreamStats([0.0] * steps, [0.0] * steps)
+    inflight: collections.deque = collections.deque()
+
+    def stage_rows(r):
+        d_rows, o_rows, last = backend.gather_rows(schedule[r])
+        ages = np.asarray(r - np.asarray(last), np.int32)
+
+        def put(a):
+            # DeviceStateBackend hands back device-resident rows — pass
+            # them through untouched (forcing them through numpy would
+            # cost a D2H+H2D round-trip and a sync every round)
+            if isinstance(a, jax.Array):
+                return a
+            return jax.device_put(np.ascontiguousarray(a))
+
+        return put(d_rows), put(o_rows), jax.device_put(ages)
+
+    def stage_data(r):
+        return jax.device_put(np.asarray(batch_fn(r)))
+
+    def retire(keep: int):
+        while len(inflight) > keep:
+            rr, ii, nd, no, m = inflight.popleft()
+            t0 = time.perf_counter()
+            nd, no = np.asarray(nd), np.asarray(no)  # blocks on round rr
+            stats.stall_s[rr] = time.perf_counter() - t0
+            backend.scatter_rows(ii, nd, no, rr)
+            metrics_out[rr] = jax.tree.map(np.asarray, m)
+            stats.retire_t[rr] = time.perf_counter()
+
+    rows = stage_rows(0)
+    data = stage_data(0)
+    for r in range(steps):
+        w = None if wts is None else jnp.asarray(np.asarray(wts[r],
+                                                            np.float32))
+        shared, nd, no, m = eng(shared, rows[0], rows[1], rows[2], w, data)
+        inflight.append((r, np.asarray(schedule[r]), nd, no, m))
+        last = r + 1 == steps
+        if prefetch and not last:
+            data = stage_data(r + 1)       # overlaps round r's compute
+        # sync (async_rounds=0): blocks on round r itself, so the gather
+        # below sees a fully up-to-date store.  async (S>0): blocks only
+        # on rounds <= r-S (long since done) — round r stays in flight
+        # while r+1's rows are gathered from the bounded-stale store and
+        # its dispatch goes out without the device ever idling.
+        retire(async_rounds)
+        if not last:
+            rows = stage_rows(r + 1)
+        if not prefetch and not last:
+            data = stage_data(r + 1)       # serialized staging (no overlap)
+    retire(0)
+    return shared, metrics_out, stats
+
+
+def _run_cohort_host(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
+                     approach: str, steps: int, B: int, seed: int,
+                     eval_samples: int, participation: str, cohort_size: int,
+                     rng: np.random.Generator, async_rounds: int,
+                     prefetch: bool, adaptive: bool,
+                     materialize_state: bool = True) -> RunResult:
+    """Host-resident streamed run: the (U, N) store lives in pinned host
+    NumPy buffers (HostStateBackend) and every round moves exactly C rows
+    each way — per-round cost is independent of U, which is bounded by
+    host RAM instead of accelerator memory."""
+    U, C = fcfg.num_users, cohort_size
+    schedule = _cohort_schedule(dataset, participation, U, C, steps, seed)
+    wts = participation_weights(schedule, U) if adaptive else None
+
+    shared, backend = init_host_backend(pair, fcfg, jax.random.key(seed),
+                                        sync_ds=(approach == "approach1"))
+    eng = make_cohort_rows_engine(pair, fcfg, approach)
+
+    def batch_round(r: int):
+        return np.stack([np.asarray(dataset.user_batch(int(u), rng, B))
+                         for u in schedule[r]])
+
+    t0 = time.perf_counter()
+    shared, mets, stats = stream_cohort_rounds(
+        eng, shared, backend, schedule, batch_round,
+        async_rounds=async_rounds, prefetch=prefetch, wts=wts)
+
+    retire_t = stats.retire_t
+    compile_s = retire_t[0] - t0
+    steady = retire_t[-1] - retire_t[0] if steps > 1 else 0.0
+    step_denom = max(steps - 1, 1)
+    # steady-state per-round estimate: min over sliding windows of retire
+    # stamps (robust to the compile round and background-load spikes)
+    W = max(1, min(8, (steps - 1) // 2))
+    rates = [(retire_t[i + W] - retire_t[i]) / W
+             for i in range(1, steps - W)]
+    min_step_s = min(rates) if rates else steady / step_denom
+
+    g_losses = np.asarray([float(m["g_loss"]) for m in mets])
+    d_losses = np.stack([np.asarray(m["d_loss"]) for m in mets])
+    mean_age = np.asarray([float(m["mean_age"]) for m in mets])
+    kept_frac = float(mets[-1]["kept_frac"])
+    kept_mean = float(np.mean([float(m["kept_frac"]) for m in mets]))
+
+    samples = None
+    if eval_samples:
+        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
+        samples = np.asarray(pair.g_apply(shared.g, z))
+
+    # unpacking the store into the stacked interop layout puts (U, N)
+    # buffers on DEVICE — opt out for U beyond accelerator memory (the
+    # regime this backend exists for); the host store stays reachable
+    # via extra["host_backend"]
+    state = None
+    if materialize_state:
+        cstate = CohortState(shared.g, shared.g_opt, backend.snapshot(),
+                             shared.server_d, shared.step, shared.key)
+        state = cohort_state_to_full(pair, fcfg, cstate)
+    counts = np.bincount(schedule.ravel(), minlength=U)
+    staleness = steps - backend.last_round
+    return RunResult(
+        g_losses=g_losses,
+        d_losses=d_losses,
+        wall_time_s=compile_s + steady,
+        step_time_s=steady / step_denom,
+        samples=samples,
+        state=state,
+        extra={"compile_s": compile_s, "kept_frac": kept_frac,
+               "engine": "fused", "min_step_time_s": min_step_s,
+               "participation": participation, "cohort_size": C,
+               "schedule": schedule,
+               "participation_counts": counts,
+               "staleness": staleness,
+               "mean_age": mean_age,
+               "state_backend": "host",
+               "host_backend": backend,
+               "async_rounds": async_rounds,
+               "prefetch": prefetch,
+               # mean host-blocked-on-device seconds per steady round:
+               # the pipeline's figure of merit.  The compile round AND
+               # the end-of-run drain (the final async_rounds retires
+               # block on still-running rounds by construction) are
+               # excluded — with them, an async run's "steady" stall
+               # would just be drain/steps and shrink with run length
+               "host_stall_s_per_round": float(np.mean(
+                   stats.stall_s[1:max(steps - async_rounds, 2)]))
+               if steps > 1 else 0.0,
+               "adaptive_server_scale": adaptive,
+               **({"participation_weights": wts} if adaptive else {}),
+               **_upload_accounting(pair, fcfg, approach, C, kept_mean)},
     )
 
 

@@ -82,7 +82,10 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
     for the classic one-user-per-device layout, the cohort size C for the
     cohort-virtualized layout (repro.core.engine.make_spmd_cohort_engine).
     The optional third body argument ``age`` is this shard's scalar
-    participation age, consumed only by the staleness-aware folds."""
+    participation age, consumed only by the staleness-aware folds; the
+    optional fourth, ``weight``, is this shard's scalar
+    participation-adaptive combine weight (approach 1, non-shared_random
+    selections) — the SPMD analogue of the host bodies' ``weights``."""
     g_opt_def, d_opt_def = _opts(fcfg)
     layout = d_flat_layout(pair)
     width = fcfg.num_users if width is None else width
@@ -95,7 +98,7 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
         updates, opt = d_opt_def.update(grads, opt, d)
         return apply_updates(d, updates), opt, loss
 
-    def body(state: DistGANState, real, age=None):
+    def body(state: DistGANState, real, age=None, weight=None):
         key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
         my_real = real[0]                     # this shard's private slice
@@ -112,6 +115,9 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
             # of a tree of small leaves.
             delta = layout.flatten(d) - old_flat
             if fcfg.selection == "shared_random":
+                assert weight is None, \
+                    "adaptive weights need per-user uploads (the shared_" \
+                    "random fold psums before any per-member scaling)"
                 # bandwidth-true: only frac*N values cross the users axis
                 comb, kept = combine_shared_random_flat_spmd(
                     delta, fcfg.upload_frac, ksel, AXIS)
@@ -119,6 +125,10 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
                 masked, kept = select_delta_flat(
                     delta, fcfg.selection, frac=fcfg.upload_frac, key=ksel,
                     use_kernel=fcfg.use_topk_kernel)
+                if weight is not None:
+                    # participation-adaptive combine weight, applied to
+                    # this shard's upload BEFORE the cross-user fold
+                    masked = masked * weight
                 if fcfg.combiner.startswith("staleness"):
                     # age-discount the shard's delta BEFORE the fold (the
                     # SPMD analogue of COMBINERS['staleness_*'])
@@ -279,6 +289,72 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
         return new_carry, metrics
 
     return round_fn
+
+
+def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
+                                 approach: str, cohort_size: int):
+    """Host-backend feed for the mesh-mapped cohort engine: the scheduled
+    cohort's rows arrive SHARDED over the ``users`` mesh axis (one member
+    per slice) and stream back the same way — no (U, N) store exists on
+    device at all, replicated or otherwise.  Where
+    ``make_spmd_cohort_engine`` replicates the whole store on every
+    device (U bounded by per-device memory), this engine pairs with a
+    host UserStateBackend via ``core.protocol.stream_cohort_rounds``: U
+    is bounded by host RAM and each round moves C rows across the
+    host<->device boundary, C/devices rows per device.
+
+    Same call signature as ``make_cohort_rows_engine``:
+    ``eng(shared, d_rows, opt_rows, ages, wts, real) ->
+    (shared, new_d_rows, new_opt_rows, metrics)`` with the row/age/real
+    inputs sharded over the mesh axis and the CohortShared carry
+    replicated (donated, so it chains in place across rounds).
+    """
+    from repro.core.engine import CohortShared
+
+    axis_size = mesh.shape[AXIS]
+    assert axis_size == cohort_size, (
+        f"cohort must equal the '{AXIS}' mesh axis (C={cohort_size}, "
+        f"axis={axis_size})")
+    inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(shared: "CohortShared", d_rows, o_rows, ages, wts, real):
+        # per-shard blocks: d_rows (1, Nd), o_rows (1, No), ages (1,),
+        # wts (1,) | None, real (1, B, ...)
+        state = DistGANState(
+            shared.g, shared.g_opt,
+            _restack(d_layout.unflatten(d_rows[0])),
+            _restack(o_layout.unflatten(o_rows[0])),
+            shared.server_d, shared.step, shared.key)
+        w = None if wts is None else wts[0]
+        new_state, metrics = inner(state, real, ages[0], w)
+        new_shared = CohortShared(new_state.g, new_state.g_opt,
+                                  new_state.server_d, new_state.step,
+                                  new_state.key)
+        nd = d_layout.flatten(_unstack(new_state.ds))[None]
+        no = o_layout.flatten(_unstack(new_state.d_opts))[None]
+        C = jnp.float32(cohort_size)
+        metrics = dict(metrics, mean_age=jax.lax.psum(
+            ages[0].astype(jnp.float32), AXIS) / C)
+        return new_shared, nd, no, metrics
+
+    def step(shared, d_rows, o_rows, ages, wts, real):
+        rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
+        shared_specs = CohortShared(
+            g=rep(shared.g), g_opt=rep(shared.g_opt),
+            server_d=rep(shared.server_d), step=PS(), key=PS())
+        metric_specs = {"d_loss": PS(AXIS), "g_loss": PS(),
+                        "kept_frac": PS(), "mean_age": PS()}
+        w_spec = None if wts is None else PS(AXIS)
+        fn = shard_map_compat(
+            round_fn, mesh,
+            in_specs=(shared_specs, PS(AXIS), PS(AXIS), PS(AXIS), w_spec,
+                      PS(AXIS)),
+            out_specs=(shared_specs, PS(AXIS), PS(AXIS), metric_specs))
+        return fn(shared, d_rows, o_rows, ages, wts, real)
+
+    return jax.jit(step, donate_argnums=(0, 1, 2))
 
 
 def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):

@@ -93,10 +93,15 @@ def dirichlet_partition(data: np.ndarray, labels: np.ndarray,
             label_hist[u, ci] = len(part)
     owned = [np.concatenate(p) if p else np.empty((0,), np.int64)
              for p in per_user]
+    class_col = {c: ci for ci, c in enumerate(classes)}
     for u in range(num_users):           # repair empty shards
         while len(owned[u]) == 0:
             donor = int(np.argmax([len(o) for o in owned]))
             owned[u], owned[donor] = owned[donor][-1:], owned[donor][:-1]
+            # keep the recorded histogram describing the ACTUAL shards
+            ci = class_col[labels[owned[u][0]]]
+            label_hist[u, ci] += 1
+            label_hist[donor, ci] -= 1
     shards = [data[np.sort(o)] for o in owned]
     return _make_shard_dataset(
         shards, {"partition": "dirichlet", "alpha": float(alpha),

@@ -13,7 +13,8 @@ from repro.core.approaches import (DistGANConfig, d_flat_layout,
 from repro.core.federated import (COMBINERS, cohort_gather, cohort_scatter,
                                   combine_staleness_max_abs,
                                   combine_staleness_mean, make_cohort_store,
-                                  make_schedule)
+                                  make_schedule, participation_weights,
+                                  upload_bytes_flat)
 from repro.core.gan import MLPGanConfig, make_mlp_pair
 from repro.core.protocol import run_distgan
 from repro.data.federated import (FederatedDataset, dirichlet_partition,
@@ -276,3 +277,186 @@ def test_baseline_rejects_cohorting():
     with pytest.raises(AssertionError):
         run_distgan(PAIR, DistGANConfig(), ds, "baseline", steps=2,
                     batch_size=8, eval_samples=0, participation="uniform")
+
+
+# ---------------------------------------------------------------------------
+# cohort-aware upload accounting (satellite): C uploads per round, not U
+# ---------------------------------------------------------------------------
+
+def test_upload_bytes_flat_prices_each_policy():
+    n = 1000
+    assert upload_bytes_flat(n, "none") == 4 * n
+    assert upload_bytes_flat(n, "topk", 0.3) == 300 * 8
+    assert upload_bytes_flat(n, "random", 0.3) == 300 * 8
+    # shared_random ships values only (mask derived from a shared key)
+    assert upload_bytes_flat(n, "shared_random", 0.3) == 300 * 4
+    # threshold is data-dependent: the measured kept fraction is REQUIRED
+    assert upload_bytes_flat(n, "threshold", kept_frac=0.5) == 500 * 8
+    with pytest.raises(AssertionError):
+        upload_bytes_flat(n, "threshold", 0.3)
+
+
+def test_run_distgan_reports_cohort_scaled_upload_bytes():
+    """A U=6, C=2 run must account 2 uploads per round — the scheduled
+    cohort — not 6."""
+    U, C = 6, 2
+    ds = _ds(U)
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    r = run_distgan(PAIR, fcfg, ds, "approach1", steps=6, batch_size=16,
+                    seed=0, eval_samples=0, participation="uniform",
+                    cohort_size=C)
+    n = d_flat_layout(PAIR).n
+    per_user = int(n * 0.3) * 8
+    assert r.extra["upload_bytes_per_user"] == per_user
+    assert r.extra["upload_bytes_per_round"] == C * per_user
+    # full participation accounts all U users
+    rf = run_distgan(PAIR, fcfg, ds, "approach1", steps=4, batch_size=16,
+                     seed=0, eval_samples=0)
+    assert rf.extra["upload_bytes_per_round"] == U * per_user
+    # approaches without parameter uploads don't report the key
+    r2 = run_distgan(PAIR, DistGANConfig(num_users=U), ds, "approach2",
+                     steps=4, batch_size=16, seed=0, eval_samples=0,
+                     participation="uniform", cohort_size=C)
+    assert "upload_bytes_per_round" not in r2.extra
+
+
+# ---------------------------------------------------------------------------
+# participation-adaptive combine weights (satellite)
+# ---------------------------------------------------------------------------
+
+def test_participation_weights_favor_under_participants():
+    """A user drawn less often than the uniform expectation gets a larger
+    weight; each round is mean-1 normalized; round 0 is all-ones."""
+    # user 0 appears every round, users 1..3 rotate in the second slot
+    sched = np.asarray([[0, 1], [0, 2], [0, 3], [0, 1], [0, 2]], np.int32)
+    w = participation_weights(sched, num_users=4)
+    assert w.shape == (5, 2) and w.dtype == np.float32
+    np.testing.assert_allclose(w[0], [1.0, 1.0])
+    np.testing.assert_allclose(w.mean(axis=1), np.ones(5), rtol=1e-6)
+    # from round 1 on, the over-participating user 0 weighs LESS than the
+    # rotating under-participants
+    assert np.all(w[1:, 0] < w[1:, 1])
+    # and the gap grows with the imbalance
+    assert w[4, 0] < w[1, 0]
+
+
+def test_adaptive_server_scale_end_to_end():
+    """Opt-in combiner option: device and host backends agree (to the
+    usual 1-ULP scan-vs-standalone tiling — tests/test_stream.py), the
+    weights are reported, and the trajectory genuinely differs from the
+    non-adaptive run (the weighted fold changes the server updates)."""
+    U, C = 6, 2
+    ds = _ds(U)
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    kw = dict(steps=8, batch_size=16, seed=0, eval_samples=0,
+              participation="weighted", cohort_size=C)
+    r_dev = run_distgan(PAIR, fcfg, ds, "approach1",
+                        adaptive_server_scale=True, **kw)
+    r_host = run_distgan(PAIR, fcfg, ds, "approach1", state_backend="host",
+                         adaptive_server_scale=True, **kw)
+    r_plain = run_distgan(PAIR, fcfg, ds, "approach1", **kw)
+    np.testing.assert_allclose(r_dev.g_losses, r_host.g_losses,
+                               rtol=0, atol=1e-6)
+    assert r_dev.extra["adaptive_server_scale"]
+    assert r_dev.extra["participation_weights"].shape == (8, C)
+    assert not np.array_equal(r_dev.g_losses, r_plain.g_losses)
+    assert np.all(np.isfinite(r_dev.g_losses))
+
+
+def test_adaptive_server_scale_requires_approach1_cohort():
+    ds = _ds(4)
+    with pytest.raises(AssertionError):
+        run_distgan(PAIR, DistGANConfig(num_users=4), ds, "approach2",
+                    steps=2, batch_size=8, eval_samples=0,
+                    participation="uniform", cohort_size=2,
+                    adaptive_server_scale=True)
+    with pytest.raises(AssertionError):
+        run_distgan(PAIR, DistGANConfig(num_users=4), ds, "approach1",
+                    steps=2, batch_size=8, eval_samples=0,
+                    adaptive_server_scale=True)
+
+
+# ---------------------------------------------------------------------------
+# padded-with-mask remainder chunks x partial cohorts (satellite)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("approach", ["approach1", "approach2", "approach3"])
+def test_remainder_chunk_with_partial_cohort_is_invariant(approach):
+    """steps % rounds_per_jit != 0 while C < U: the padded-and-masked
+    trailing chunk must not perturb the trajectory — a run chunked 4+4+2
+    (padded) is bitwise the run chunked 5+5 (exact)."""
+    U, C = 6, 2
+    ds = _ds(U)
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    kw = dict(steps=10, batch_size=16, seed=0, eval_samples=0,
+              participation="round_robin", cohort_size=C)
+    r_pad = run_distgan(PAIR, fcfg, ds, approach, rounds_per_jit=4, **kw)
+    r_exact = run_distgan(PAIR, fcfg, ds, approach, rounds_per_jit=5, **kw)
+    np.testing.assert_array_equal(r_pad.g_losses, r_exact.g_losses)
+    np.testing.assert_array_equal(r_pad.d_losses, r_exact.d_losses)
+    assert r_pad.d_losses.shape == (10, C)
+
+
+def test_spmd_cohort_remainder_chunk_masked_pad():
+    """The SPMD cohort engine under a padded+masked remainder chunk (C < U
+    on 4 devices): padded rounds never touch the carry — two chunk splits
+    of the same 6 rounds agree with the single-chunk reference."""
+    import os
+    import subprocess
+    import sys
+    import textwrap
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.gan import make_mlp_pair, MLPGanConfig
+        from repro.core.approaches import DistGANConfig
+        from repro.core.engine import (init_cohort_state,
+                                       make_spmd_cohort_engine)
+        from repro.core.federated import make_schedule
+        from repro.launch.mesh import make_users_mesh
+
+        C, U, K = 4, 8, 6
+        pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                          d_hidden=16))
+        mesh = make_users_mesh(C)
+        rng = np.random.default_rng(0)
+        reals = rng.normal(size=(K, C, 16, 2)).astype(np.float32)
+        sched = make_schedule("round_robin", U, C, K,
+                              np.random.default_rng(1))
+        fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+        eng = make_spmd_cohort_engine(pair, fcfg, mesh, "approach1", C)
+
+        def pad(a, k):
+            fill = np.broadcast_to(a[-1:], (k - a.shape[0],) + a.shape[1:])
+            return np.concatenate([a, fill], 0)
+
+        # reference: one unmasked chunk of all 6 rounds
+        c_ref = init_cohort_state(pair, fcfg, jax.random.key(0),
+                                  sync_ds=True)
+        c_ref, m_ref = eng(c_ref, jnp.asarray(reals), jnp.asarray(sched))
+
+        # padded: chunks of 4 -> rounds 0-3, then 4-5 padded to 4 + mask
+        c = init_cohort_state(pair, fcfg, jax.random.key(0), sync_ds=True)
+        gl = []
+        for start, k in [(0, 4), (4, 2)]:
+            rs = jnp.asarray(pad(reals[start:start + 4], 4))
+            ix = jnp.asarray(pad(sched[start:start + 4], 4))
+            valid = jnp.asarray(np.arange(4) < k)
+            c, m = eng(c, rs, ix, valid=valid)
+            gl.append(np.asarray(m["g_loss"])[:k])
+        np.testing.assert_array_equal(np.asarray(m_ref["g_loss"]),
+                                      np.concatenate(gl))
+        np.testing.assert_array_equal(np.asarray(c_ref.store.d_flat),
+                                      np.asarray(c.store.d_flat))
+        np.testing.assert_array_equal(np.asarray(c_ref.store.last_round),
+                                      np.asarray(c.store.last_round))
+        print("SPMD PAD OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SPMD PAD OK" in r.stdout

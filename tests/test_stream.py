@@ -1,0 +1,358 @@
+"""Host-resident user store + streamed cohort rounds (the PR 3 tentpole):
+UserStateBackend contract, bit-exact host init, the double-buffered
+streaming driver in synchronous and async bounded-staleness modes, and
+the SPMD rows engine fed from the host backend.
+
+Correctness ladder:
+* device backend, synchronous — bitwise-pinned to the PR 2 trajectories
+  (tests/test_engine.py, unchanged);
+* host backend, synchronous — reproduces the device trajectories to
+  within 1 ULP/round (the standalone round program tiles a handful of
+  reductions differently from the scan-embedded one; pinned here at
+  atol=1e-6);
+* async bounded staleness — EXACTLY equal to synchronous whenever no
+  cohort member is re-drawn while its update is in flight (disjoint
+  round_robin cohorts), and degrades gracefully (finite, ages grow by
+  the pipeline lag) when members overlap.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.approaches import (DistGANConfig, d_flat_layout,
+                                   d_opt_flat_layout, init_state)
+from repro.core.engine import (init_cohort_state, init_host_backend,
+                               make_cohort_rows_engine)
+from repro.core.federated import (DeviceStateBackend, HostStateBackend,
+                                  make_cohort_store, make_schedule)
+from repro.core.gan import MLPGanConfig, make_mlp_pair
+from repro.core.protocol import run_distgan, stream_cohort_rounds
+from repro.data.federated import FederatedDataset
+from repro.data.mixtures import make_user_domains
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                  d_hidden=32))
+
+
+def _ds(num_users):
+    users, union = make_user_domains(num_users, 2, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample,
+                            {"shard_sizes": [100 * (u + 1)
+                                             for u in range(num_users)]})
+
+
+# ---------------------------------------------------------------------------
+# backend contract
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend_cls", [DeviceStateBackend,
+                                         HostStateBackend])
+def test_backend_gather_scatter_roundtrip(backend_cls):
+    """Both backends implement the same contract: gather returns copies of
+    the cohort rows, scatter writes them back and stamps last_round, and
+    snapshot round-trips to a device CohortStore bit-exactly."""
+    fcfg = DistGANConfig(num_users=5)
+    st = init_state(PAIR, fcfg, jax.random.key(0))
+    dl, ol = d_flat_layout(PAIR), d_opt_flat_layout(PAIR, fcfg)
+    store = make_cohort_store(st.ds, st.d_opts, dl, ol)
+    be = (DeviceStateBackend(store) if backend_cls is DeviceStateBackend
+          else HostStateBackend.from_store(store))
+    assert be.num_users == 5
+
+    idx = np.asarray([3, 0, 4], np.int32)
+    d_rows, o_rows, last = be.gather_rows(idx)
+    assert np.asarray(d_rows).shape == (3, dl.n)
+    assert np.asarray(o_rows).shape == (3, ol.n)
+    np.testing.assert_array_equal(np.asarray(last), [0, 0, 0])
+    np.testing.assert_array_equal(np.asarray(d_rows),
+                                  np.asarray(store.d_flat)[idx])
+
+    be.scatter_rows(idx, np.asarray(d_rows) + 1.0, o_rows, 7)
+    snap = be.snapshot()
+    want = np.asarray(store.d_flat).copy()
+    want[idx] += 1.0
+    np.testing.assert_array_equal(np.asarray(snap.d_flat), want)
+    np.testing.assert_array_equal(np.asarray(snap.opt_flat),
+                                  np.asarray(store.opt_flat))
+    np.testing.assert_array_equal(np.asarray(snap.last_round),
+                                  [7, 0, 0, 7, 7])
+
+
+def test_host_backend_gather_returns_copies():
+    """The gathered rows must be COPIES: scatter-back while a gathered
+    buffer is still referenced (the async in-flight window) must not
+    mutate it under the device transfer."""
+    be = HostStateBackend(np.arange(12, dtype=np.float32).reshape(4, 3),
+                          np.zeros((4, 2), np.float32),
+                          np.zeros(4, np.int32))
+    d_rows, _, _ = be.gather_rows(np.asarray([1, 2]))
+    before = d_rows.copy()
+    be.scatter_rows(np.asarray([1, 2]), d_rows + 99.0,
+                    np.zeros((2, 2), np.float32), 3)
+    np.testing.assert_array_equal(d_rows, before)
+
+
+# ---------------------------------------------------------------------------
+# host init == device init (bit-exact, chunked)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sync_ds", [True, False])
+def test_init_host_backend_matches_device_init(sync_ds):
+    """The chunked host-side init materializes at most init_chunk rows on
+    device at a time yet lands on the SAME values as init_cohort_state
+    (bitwise — including an init_chunk that does not divide U)."""
+    fcfg = DistGANConfig(num_users=7)
+    cs = init_cohort_state(PAIR, fcfg, jax.random.key(3), sync_ds=sync_ds)
+    sh, be = init_host_backend(PAIR, fcfg, jax.random.key(3),
+                               sync_ds=sync_ds, init_chunk=3)
+    np.testing.assert_array_equal(np.asarray(cs.store.d_flat), be.d_flat)
+    np.testing.assert_array_equal(np.asarray(cs.store.opt_flat), be.opt_flat)
+    np.testing.assert_array_equal(np.asarray(cs.store.last_round),
+                                  be.last_round)
+    for a, b in zip(jax.tree.leaves((cs.g, cs.g_opt, cs.server_d)),
+                    jax.tree.leaves((sh.g, sh.g_opt, sh.server_d))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(jax.random.key_data(cs.key),
+                                  jax.random.key_data(sh.key))
+
+
+# ---------------------------------------------------------------------------
+# host backend == device backend trajectories (synchronous)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("approach", ["approach1", "approach2", "approach3"])
+def test_host_sync_matches_device_trajectory(approach):
+    """Synchronous streamed rounds against the host store reproduce the
+    scan-compiled device-store trajectories (ULP pin: the device backend
+    itself stays bitwise-pinned to PR 2 by tests/test_engine.py)."""
+    ds = _ds(8)
+    fcfg = DistGANConfig(num_users=8, selection="topk", upload_frac=0.3)
+    kw = dict(steps=10, batch_size=16, seed=0, eval_samples=0,
+              participation="uniform", cohort_size=3)
+    r_dev = run_distgan(PAIR, fcfg, ds, approach, rounds_per_jit=4, **kw)
+    r_host = run_distgan(PAIR, fcfg, ds, approach, state_backend="host",
+                         **kw)
+    np.testing.assert_allclose(r_dev.g_losses, r_host.g_losses,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(r_dev.d_losses, r_host.d_losses,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(r_dev.extra["schedule"],
+                                  r_host.extra["schedule"])
+    np.testing.assert_array_equal(r_dev.extra["staleness"],
+                                  r_host.extra["staleness"])
+    np.testing.assert_array_equal(r_dev.extra["mean_age"],
+                                  r_host.extra["mean_age"])
+    assert r_host.extra["state_backend"] == "host"
+
+
+def test_host_prefetch_knob_is_perf_neutral():
+    """prefetch only reorders host staging against device compute — the
+    trajectory must be bitwise unchanged."""
+    ds = _ds(6)
+    fcfg = DistGANConfig(num_users=6, selection="topk", upload_frac=0.3)
+    kw = dict(steps=8, batch_size=16, seed=0, eval_samples=0,
+              participation="round_robin", cohort_size=2,
+              state_backend="host")
+    a = run_distgan(PAIR, fcfg, ds, "approach1", prefetch=True, **kw)
+    b = run_distgan(PAIR, fcfg, ds, "approach1", prefetch=False, **kw)
+    np.testing.assert_array_equal(a.g_losses, b.g_losses)
+    np.testing.assert_array_equal(a.d_losses, b.d_losses)
+
+
+# ---------------------------------------------------------------------------
+# async bounded staleness
+# ---------------------------------------------------------------------------
+
+def test_async_disjoint_cohorts_equals_sync():
+    """round_robin with C dividing U gives U/C rounds between a user's
+    consecutive draws; with async_rounds < U/C no member is ever gathered
+    while its update is in flight, so the async trajectory is EXACTLY the
+    synchronous one (the pipeline only overlaps, never staled)."""
+    ds = _ds(8)
+    fcfg = DistGANConfig(num_users=8, selection="topk", upload_frac=0.3)
+    kw = dict(steps=10, batch_size=16, seed=0, eval_samples=0,
+              participation="round_robin", cohort_size=2,
+              state_backend="host")
+    r_sync = run_distgan(PAIR, fcfg, ds, "approach1", **kw)
+    r_async = run_distgan(PAIR, fcfg, ds, "approach1", async_rounds=2, **kw)
+    np.testing.assert_array_equal(r_sync.g_losses, r_async.g_losses)
+    np.testing.assert_array_equal(r_sync.d_losses, r_async.d_losses)
+    assert r_async.extra["async_rounds"] == 2
+
+
+def test_async_overlap_bounded_staleness_ages():
+    """Full participation with U == C == 2: every member is in flight when
+    re-drawn, so with async_rounds=S the steady-state age is S+1 (the
+    gather sees a store S+1 rounds behind) — surfaced through mean_age,
+    consumed by the staleness combiners, and the run stays finite."""
+    ds = _ds(2)
+    fcfg = DistGANConfig(num_users=2, selection="topk", upload_frac=0.3,
+                         combiner="staleness_mean")
+    kw = dict(steps=10, batch_size=16, seed=0, eval_samples=0,
+              state_backend="host")
+    r_sync = run_distgan(PAIR, fcfg, ds, "approach1", **kw)
+    r_async = run_distgan(PAIR, fcfg, ds, "approach1", async_rounds=1, **kw)
+    # sync steady-state age is 1 (trained last round); async lags by S
+    assert np.all(r_sync.extra["mean_age"][1:] == 1.0)
+    np.testing.assert_array_equal(r_async.extra["mean_age"][:4],
+                                  [0.0, 1.0, 2.0, 2.0])
+    assert np.all(r_async.extra["mean_age"][2:] == 2.0)
+    assert np.all(np.isfinite(r_async.g_losses))
+    # stale rows genuinely change the trajectory
+    assert not np.array_equal(r_sync.g_losses, r_async.g_losses)
+    # final last_round reflects every landed scatter (drain at the end)
+    assert np.all(r_async.extra["staleness"] == 1)
+
+
+def test_async_rejects_device_backend():
+    ds = _ds(2)
+    with pytest.raises(AssertionError):
+        run_distgan(PAIR, DistGANConfig(), ds, "approach1", steps=2,
+                    batch_size=8, eval_samples=0, async_rounds=1)
+
+
+# ---------------------------------------------------------------------------
+# streamed remainder interplay + partial cohorts (satellite): the host
+# path has no chunk padding (one dispatch per round), so ANY steps count
+# must agree with the device path's padded-with-mask remainder chunks
+# ---------------------------------------------------------------------------
+
+def test_host_stream_matches_padded_device_chunks():
+    """steps % rounds_per_jit != 0 while C < U: the device path pads the
+    trailing chunk with masked rounds; the host stream dispatches exactly
+    ``steps`` rounds.  Both must land on the same trajectory."""
+    ds = _ds(6)
+    fcfg = DistGANConfig(num_users=6, selection="topk", upload_frac=0.3)
+    kw = dict(steps=11, batch_size=16, seed=0, eval_samples=0,
+              participation="uniform", cohort_size=2)
+    r_dev = run_distgan(PAIR, fcfg, ds, "approach1", rounds_per_jit=4, **kw)
+    r_host = run_distgan(PAIR, fcfg, ds, "approach1", state_backend="host",
+                         **kw)
+    assert r_dev.g_losses.shape == r_host.g_losses.shape == (11,)
+    np.testing.assert_allclose(r_dev.g_losses, r_host.g_losses,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(r_dev.d_losses, r_host.d_losses,
+                               rtol=0, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# large-U smoke: U far beyond what a device-resident store would like
+# ---------------------------------------------------------------------------
+
+def test_large_u_host_backend_smoke():
+    """U=1024 logical users on the host store, C=4 streamed per round —
+    resident device state never materializes a (U, N) buffer (the full
+    benchmark gate for U=4096 flatness lives in benchmarks paper_stream)."""
+    U, C = 1024, 4
+    base = np.random.default_rng(0).normal(size=(512, 2)).astype(np.float32)
+
+    def sampler(rng, n):
+        return base[rng.integers(0, len(base), size=n)]
+
+    ds = FederatedDataset([sampler] * U, sampler,
+                          {"shard_sizes": [512] * U})
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    r = run_distgan(PAIR, fcfg, ds, "approach1", steps=6, batch_size=16,
+                    seed=0, eval_samples=0, participation="uniform",
+                    cohort_size=C, state_backend="host", async_rounds=1)
+    assert r.g_losses.shape == (6,)
+    assert np.all(np.isfinite(r.g_losses))
+    assert r.d_losses.shape == (6, C)
+    assert r.extra["participation_counts"].sum() == 6 * C
+    assert r.extra["upload_bytes_per_round"] == \
+        C * r.extra["upload_bytes_per_user"]
+
+
+def test_materialize_state_opt_out_keeps_store_on_host():
+    """materialize_state=False: RunResult.state stays None (no (U, N)
+    device unpack at the end of the run — the whole point of the host
+    residency) while the host backend handle in extra still serves rows
+    and an on-demand snapshot."""
+    ds = _ds(6)
+    fcfg = DistGANConfig(num_users=6, selection="topk", upload_frac=0.3)
+    r = run_distgan(PAIR, fcfg, ds, "approach1", steps=4, batch_size=16,
+                    seed=0, eval_samples=0, participation="uniform",
+                    cohort_size=2, state_backend="host",
+                    materialize_state=False)
+    assert r.state is None
+    be = r.extra["host_backend"]
+    assert be.num_users == 6
+    d_rows, o_rows, last = be.gather_rows(np.asarray([0, 5]))
+    assert d_rows.shape[0] == 2
+    assert be.snapshot().d_flat.shape[0] == 6
+    # the default still materializes the interop state
+    r2 = run_distgan(PAIR, fcfg, ds, "approach1", steps=4, batch_size=16,
+                     seed=0, eval_samples=0, participation="uniform",
+                     cohort_size=2, state_backend="host")
+    assert r2.state is not None
+    assert all(l.shape[0] == 6 for l in jax.tree.leaves(r2.state.ds))
+
+
+# ---------------------------------------------------------------------------
+# SPMD: host backend feeding the mesh-mapped cohort engine
+# ---------------------------------------------------------------------------
+
+def test_spmd_rows_engine_matches_replicated_store_engine():
+    """The sharded-rows SPMD engine (host store, no device-resident (U, N)
+    buffers at all) reproduces the replicated-store SPMD cohort engine —
+    bitwise on the final store — and runs U=8 on 4 devices."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core.gan import make_mlp_pair, MLPGanConfig
+        from repro.core.approaches import DistGANConfig
+        from repro.core.engine import (init_cohort_state, init_host_backend,
+                                       make_spmd_cohort_engine)
+        from repro.core.spmd import make_spmd_cohort_rows_engine
+        from repro.core.federated import make_schedule
+        from repro.core.protocol import stream_cohort_rounds
+        from repro.launch.mesh import make_users_mesh
+
+        C, U = 4, 8
+        pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                          d_hidden=16))
+        mesh = make_users_mesh(C)
+        rng = np.random.default_rng(0)
+        reals = rng.normal(size=(6, C, 16, 2)).astype(np.float32)
+        sched = make_schedule("round_robin", U, C, 6,
+                              np.random.default_rng(1))
+        for ap in ["approach1", "approach2", "approach3"]:
+            fcfg = DistGANConfig(num_users=U, selection="topk",
+                                 upload_frac=0.3)
+            c = init_cohort_state(pair, fcfg, jax.random.key(0),
+                                  sync_ds=(ap == "approach1"))
+            ceng = make_spmd_cohort_engine(pair, fcfg, mesh, ap, C)
+            c, m1 = ceng(c, jnp.asarray(reals), jnp.asarray(sched))
+            sh, be = init_host_backend(pair, fcfg, jax.random.key(0),
+                                       sync_ds=(ap == "approach1"))
+            reng = make_spmd_cohort_rows_engine(pair, fcfg, mesh, ap, C)
+            sh, m2, _ = stream_cohort_rounds(reng, sh, be, sched,
+                                             lambda r: reals[r])
+            g2 = np.asarray([m["g_loss"] for m in m2])
+            d2 = np.stack([m["d_loss"] for m in m2])
+            np.testing.assert_allclose(np.asarray(m1["g_loss"]), g2,
+                                       rtol=0, atol=1e-6)
+            np.testing.assert_allclose(np.asarray(m1["d_loss"]), d2,
+                                       rtol=0, atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(c.store.last_round),
+                                          be.last_round)
+            np.testing.assert_array_equal(np.asarray(c.store.d_flat),
+                                          be.d_flat)
+            print(ap, "OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for ap in ["approach1", "approach2", "approach3"]:
+        assert f"{ap} OK" in r.stdout

@@ -6,16 +6,22 @@ host RAM (the ROADMAP's millions-of-users regime) and per-round cost is
 FLAT in U: only the scheduled cohort's 8 rows cross the host<->device
 boundary per round.
 
-Each run is ASYNC with bounded staleness (async_rounds=2): round k's
-scatter-back may land up to 2 rounds after round k+1 launches, while the
-double-buffered driver stages round k+1's rows and data under round k's
-compute.  The staleness-aware server fold age-discounts whatever lag
-materializes, and the participation-adaptive weights boost
-under-participating users.  Growing U at fixed rounds lowers each user's
-participation count (mean age ~ U/C rounds), so sample quality degrades
-gracefully with staleness while wall-clock does not — the
-staleness-vs-quality tradeoff of the MD-GAN/BGAN partial-participation
-regime, measurable here on one host.
+Each run is described by a declarative ``FederationSpec`` (the PR 4 run
+API — ``run_distgan`` keeps working as a shim over the same path) and
+driven through a ``FederationSession``.  Runs are ASYNC with bounded
+staleness (async_rounds=2): round k's scatter-back may land up to 2
+rounds after round k+1 launches, while the double-buffered driver stages
+round k+1's rows and data under round k's compute.
+
+The sweep compares two registered approach-1 sync policies per U:
+
+* ``approach1``       — members train from the server copy of their LAST
+  participation; at U=4096 that base is ~U/C ≈ 500 rounds stale, and
+  quality falls off a cliff as the server folds ancient-base deltas;
+* ``download_first``  — members pull the CURRENT server D before
+  training (registered through the approach registry), so deltas are
+  always rebased on today's server point and quality survives deep
+  staleness at identical wall-clock.
 
   PYTHONPATH=src python examples/distgan_stream.py
 """
@@ -24,7 +30,9 @@ import numpy as np
 
 from repro.core.approaches import DistGANConfig
 from repro.core.gan import MLPGanConfig, make_mlp_pair
-from repro.core.protocol import run_distgan
+from repro.core.session import FederationSession
+from repro.core.spec import (BackendSpec, CombineSpec, FederationSpec,
+                             ParticipationSpec)
 from repro.data.federated import FederatedDataset
 from repro.data.mixtures import GaussianMixture
 
@@ -42,31 +50,38 @@ def main():
     pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=16, g_hidden=128,
                                       d_hidden=128))
 
-    print(f"{'U':>5} {'us/round':>9} {'modes':>6} {'on-mode':>8} "
-          f"{'mean age':>9} {'host MB':>8}")
+    from repro.core.approaches import d_flat_layout, d_opt_flat_layout
+
+    print(f"{'U':>5} {'approach':>15} {'us/round':>9} {'modes':>6} "
+          f"{'on-mode':>8} {'mean age':>9} {'host MB':>8}")
     for U in (64, 512, 4096):
         ds = FederatedDataset([sampler] * U, sampler,
                               {"shard_sizes": [len(pool)] * U})
-        fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.5,
-                             combiner="staleness_mean", staleness_decay=0.9)
-        r = run_distgan(pair, fcfg, ds, "approach1", steps=steps,
-                        batch_size=B, seed=0, participation="uniform",
-                        cohort_size=C, state_backend="host", async_rounds=2,
-                        adaptive_server_scale=True,
-                        materialize_state=False)
-        cov, hist = mix.mode_coverage(r.samples)
-        # resident footprint: U rows of D params + optimizer moments, on
-        # the HOST (device holds C rows at a time)
-        from repro.core.approaches import d_flat_layout, d_opt_flat_layout
-        host_mb = 4e-6 * U * (d_flat_layout(pair).n
-                              + d_opt_flat_layout(pair, fcfg).n)
-        print(f"{U:>5} {r.extra['min_step_time_s'] * 1e6:>9.0f} "
-              f"{(hist > 10).sum():>4}/{modes} {cov:>8.2f} "
-              f"{r.extra['mean_age'][-20:].mean():>9.1f} "
-              f"{host_mb:>8.1f}")
+        fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.5)
+        for approach in ("approach1", "download_first"):
+            spec = FederationSpec(
+                approach=approach, batch_size=B, seed=0,
+                participation=ParticipationSpec("uniform", cohort_size=C),
+                backend=BackendSpec("host", async_rounds=2,
+                                    materialize_state=False),
+                combine=CombineSpec("staleness_mean", staleness_decay=0.9,
+                                    adaptive_server_scale=True))
+            r = FederationSession(pair, fcfg, ds, spec).run(steps)
+            cov, hist = mix.mode_coverage(r.samples)
+            # resident footprint: U rows of D params + optimizer moments,
+            # on the HOST (device holds C rows at a time)
+            host_mb = 4e-6 * U * (d_flat_layout(pair).n
+                                  + d_opt_flat_layout(pair, fcfg).n)
+            print(f"{U:>5} {approach:>15} "
+                  f"{r.extra['min_step_time_s'] * 1e6:>9.0f} "
+                  f"{(hist > 10).sum():>4}/{modes} {cov:>8.2f} "
+                  f"{r.extra['mean_age'][-20:].mean():>9.1f} "
+                  f"{host_mb:>8.1f}")
     print(f"\nper-round time is flat in U (compiled width C={C}; host "
-          f"gather/scatter touches C rows); quality tracks participation "
-          f"frequency — rounds/user ~ steps*C/U")
+          f"gather/scatter touches C rows); approach1 quality tracks "
+          f"participation frequency (rounds/user ~ steps*C/U) while "
+          f"download_first rebases every delta on the current server D "
+          f"and rides out deep staleness")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
 """The paper's contribution: Distributed-GAN (three federated adversarial
 training approaches) as a first-class distribution strategy."""
 
-from repro.core import gan, losses, federated, approaches, protocol  # noqa: F401
+from repro.core import (gan, losses, spec, federated, approaches,  # noqa: F401
+                        session, protocol)
 
-__all__ = ["gan", "losses", "federated", "approaches", "protocol"]
+__all__ = ["gan", "losses", "spec", "federated", "approaches", "session",
+           "protocol"]

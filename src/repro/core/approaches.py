@@ -39,8 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses
-from repro.core.federated import (COMBINERS, make_flat_layout,
-                                  select_delta_flat)
+from repro.core.federated import make_flat_layout, select_delta_flat
+from repro.core.spec import register_approach, resolve_combiner
 from repro.optim import adamw, apply_updates
 
 
@@ -169,7 +169,7 @@ def _finalize_step(body):
 def make_approach1_body(pair, fcfg: DistGANConfig):
     g_opt_def, d_opt_def = _opts(fcfg)
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
-    combiner = COMBINERS[fcfg.combiner]
+    combiner = resolve_combiner(fcfg.combiner)
     layout = d_flat_layout(pair)
 
     def body(state: DistGANState, real, ages=None, weights=None):
@@ -239,6 +239,49 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
 
 def make_approach1_step(pair, fcfg: DistGANConfig):
     return _finalize_step(make_approach1_body(pair, fcfg))
+
+
+# ---------------------------------------------------------------------------
+# Approach 1 variant: download-first sync (cohort members pull the
+# CURRENT server D before training)
+# ---------------------------------------------------------------------------
+
+def make_download_first_body(pair, fcfg: DistGANConfig):
+    """Approach 1 with a download phase BEFORE local training: every
+    cohort member overwrites its (possibly deeply stale) local D with the
+    CURRENT server D, then trains and uploads its selected delta.
+
+    Under partial participation the plain approach-1 rows hold the server
+    copy from each member's LAST participation — at large U/C ratios that
+    base is hundreds of rounds old, so the uploaded delta folds an
+    ancient-base update into today's server point (the quality cliff
+    ``examples/distgan_stream.py`` measures at mean age ~360).
+    Downloading first re-bases every delta on the current server point,
+    so deltas are always fresh; participation ages are therefore zeroed
+    before the combiner (a staleness-aware fold has nothing to
+    discount), while the engines' ``mean_age`` metric still reports the
+    true participation lag.  Stored optimizer rows (Adam moments) are
+    kept — they re-adapt within the round and preserving them keeps the
+    row layout identical to approach 1.
+
+    With full participation every member re-synced LAST round too, so
+    this variant is bit-identical to ``approach1`` (pinned in
+    tests/test_spec.py)."""
+    base = make_approach1_body(pair, fcfg)
+
+    def body(state: DistGANState, real, ages=None, weights=None):
+        U = real.shape[0]
+        ds = jax.tree.map(
+            lambda s: jnp.broadcast_to(s[None], (U,) + s.shape),
+            state.server_d)
+        zero_ages = None if ages is None else jnp.zeros_like(ages)
+        return base(state._replace(ds=ds), real, zero_ages, weights)
+
+    return body
+
+
+def make_download_first_step(pair, fcfg: DistGANConfig):
+    return _finalize_step(make_download_first_body(pair, fcfg))
 
 
 # ---------------------------------------------------------------------------
@@ -365,16 +408,37 @@ def make_baseline_step(pair, fcfg: DistGANConfig):
     return _finalize_step(make_baseline_body(pair, fcfg))
 
 
-BODY_FACTORIES = {
-    "approach1": make_approach1_body,
-    "approach2": make_approach2_body,
-    "approach3": make_approach3_body,
-    "baseline": make_baseline_body,
-}
+register_approach("approach1", make_approach1_body, make_approach1_step,
+                  sync_ds=True, uploads=True)
+register_approach("approach2", make_approach2_body, make_approach2_step)
+register_approach("approach3", make_approach3_body, make_approach3_step)
+register_approach("baseline", make_baseline_body, make_baseline_step,
+                  user_axis=False)
+register_approach("download_first", make_download_first_body,
+                  make_download_first_step, sync_ds=True, uploads=True)
 
-STEP_FACTORIES = {
-    "approach1": make_approach1_step,
-    "approach2": make_approach2_step,
-    "approach3": make_approach3_step,
-    "baseline": make_baseline_step,
-}
+# legacy aliases over the registry (new approaches registered through
+# repro.core.spec.register_approach show up here too)
+import collections.abc  # noqa: E402
+
+from repro.core.spec import APPROACH_REGISTRY as _APPROACHES  # noqa: E402
+
+
+class _FactoryView(collections.abc.Mapping):
+    """Live read-only view of one ApproachDef attribute per registry key."""
+
+    def __init__(self, attr):
+        self._attr = attr
+
+    def __getitem__(self, name):
+        return getattr(_APPROACHES.get(name), self._attr)
+
+    def __iter__(self):
+        return iter(_APPROACHES.names())
+
+    def __len__(self):
+        return len(_APPROACHES.entries)
+
+
+BODY_FACTORIES = _FactoryView("body_factory")
+STEP_FACTORIES = _FactoryView("step_factory")

@@ -46,7 +46,7 @@ Streamed residency (``make_cohort_rows_engine`` + ``init_host_backend``):
 the (U, N) store leaves the device entirely — it lives in a host
 ``UserStateBackend`` and each round's dispatch consumes only the
 gathered C rows, so U is bounded by host RAM (driven by
-``core.protocol.stream_cohort_rounds``, which double-buffers staging and
+``core.session.stream_cohort_rounds``, which double-buffers staging and
 offers async bounded-staleness rounds).
 """
 
@@ -58,14 +58,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.approaches import (BODY_FACTORIES, DistGANConfig,
-                                   DistGANState, _opts, d_flat_layout,
-                                   d_opt_flat_layout, init_state)
+from repro.core.approaches import (DistGANConfig, DistGANState, _opts,
+                                   d_flat_layout, d_opt_flat_layout,
+                                   init_state)
 from repro.core.federated import (CohortStore, HostStateBackend,
                                   cohort_gather, cohort_scatter,
                                   make_cohort_store)
-
-DEFAULT_ROUNDS_PER_JIT = 16
+from repro.core.spec import DEFAULT_ROUNDS_PER_JIT, resolve_approach
 
 
 def _masked(body):
@@ -92,7 +91,7 @@ def make_engine(pair, fcfg: DistGANConfig, approach: str) -> Callable:
     for all full chunks; padded+masked calls (``valid`` given) reuse one
     program for EVERY chunk, remainder included.
     """
-    body = BODY_FACTORIES[approach](pair, fcfg)
+    body = resolve_approach(approach).body_factory(pair, fcfg)
 
     def chunk(state: DistGANState, reals, valid=None):
         if valid is None:
@@ -194,8 +193,9 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
     The flag gates the extra input so the default path traces the EXACT
     program pinned bitwise against the plain fused engine.
     """
-    assert approach != "baseline", "baseline has no user axis to virtualize"
-    body = BODY_FACTORIES[approach](pair, fcfg)
+    appr = resolve_approach(approach)
+    assert appr.user_axis, f"{approach} has no user axis to virtualize"
+    body = appr.body_factory(pair, fcfg)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
 
@@ -217,8 +217,13 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
         # fusing back into the body's update/loss clusters
         nds, nopts = jax.lax.optimization_barrier(
             (new_state.ds, new_state.d_opts))
+        # last_round records the round a member has trained THROUGH, as
+        # round+1 (0 = never trained): a member drawn again next round
+        # carries age step - last_round == 0 — the re-zeroed age
+        # convention (fresh folds are no longer uniformly discounted by
+        # one decay factor by the staleness combiners)
         store = cohort_scatter(store, idx, nds, nopts,
-                               carry.step, d_layout, o_layout)
+                               carry.step + 1, d_layout, o_layout)
         new_carry = CohortState(new_state.g, new_state.g_opt, store,
                                 new_state.server_d, new_state.step,
                                 new_state.key)
@@ -296,7 +301,7 @@ def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
 # cohort rows — (C, Nd)/(C, No) buffers that crossed the host<->device
 # boundary via jax.device_put.  Only the replicated training state
 # (CohortShared) chains device-side between dispatches, so the driver
-# (core.protocol.stream_cohort_rounds) can overlap round k's compute with
+# (core.session.stream_cohort_rounds) can overlap round k's compute with
 # round k+1's staging, and — in async bounded-staleness mode — defer
 # round k's scatter-back past round k+1's launch.
 
@@ -332,8 +337,9 @@ def make_cohort_rows_engine(pair, fcfg: DistGANConfig,
     differently — pinned at atol=1e-6 in tests/test_stream.py; the PR 2
     bitwise contract binds the DEVICE backend, which is untouched).
     """
-    assert approach != "baseline", "baseline has no user axis to virtualize"
-    body = BODY_FACTORIES[approach](pair, fcfg)
+    appr = resolve_approach(approach)
+    assert appr.user_axis, f"{approach} has no user axis to virtualize"
+    body = appr.body_factory(pair, fcfg)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
 

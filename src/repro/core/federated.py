@@ -33,6 +33,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.flatten_util import ravel_pytree
 
+from repro.core.spec import (COMBINER_REGISTRY, SCHEDULER_REGISTRY,
+                             register_combiner, register_scheduler,
+                             resolve_scheduler)
+
 Selection = Literal["topk", "threshold", "random", "none"]
 
 
@@ -177,7 +181,7 @@ def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
 #
 # ``last_round`` comes back as host ints because the drivers compute ages
 # host-side before dispatch.  Scatter is last-writer-wins: under the
-# async bounded-staleness driver (core.protocol.stream_cohort_rounds) a
+# async bounded-staleness driver (core.session.stream_cohort_rounds) a
 # round's scatter may land AFTER later rounds launched — the classic
 # async parameter-server semantics, with staleness bounded by the
 # driver's ``async_rounds`` and surfaced through ``last_round`` ages.
@@ -280,24 +284,29 @@ class HostStateBackend(UserStateBackend):
 # sampled, so they must run before device dispatch)
 # ---------------------------------------------------------------------------
 
-def _sched_full(rng, num_users, cohort, rounds, shard_sizes=None):
+def _sched_full(rng, num_users, cohort, rounds, shard_sizes=None, start=0):
     assert cohort == num_users, (
         f"'full' participation needs cohort == num_users "
         f"(got C={cohort}, U={num_users})")
     return np.tile(np.arange(num_users, dtype=np.int32), (rounds, 1))
 
 
-def _sched_uniform(rng, num_users, cohort, rounds, shard_sizes=None):
+def _sched_uniform(rng, num_users, cohort, rounds, shard_sizes=None,
+                   start=0):
     return np.stack([rng.choice(num_users, size=cohort, replace=False)
                      for _ in range(rounds)]).astype(np.int32)
 
 
-def _sched_round_robin(rng, num_users, cohort, rounds, shard_sizes=None):
-    start = np.arange(rounds, dtype=np.int64)[:, None] * cohort
-    return ((start + np.arange(cohort)) % num_users).astype(np.int32)
+def _sched_round_robin(rng, num_users, cohort, rounds, shard_sizes=None,
+                       start=0):
+    # keyed off the GLOBAL round index so a window generated at
+    # start=k continues the rotation exactly where round k-1 left it
+    first = np.arange(start, start + rounds, dtype=np.int64)[:, None] * cohort
+    return ((first + np.arange(cohort)) % num_users).astype(np.int32)
 
 
-def _sched_weighted(rng, num_users, cohort, rounds, shard_sizes=None):
+def _sched_weighted(rng, num_users, cohort, rounds, shard_sizes=None,
+                    start=0):
     assert shard_sizes is not None and len(shard_sizes) == num_users, (
         "'weighted' participation needs per-user shard sizes "
         "(dataset.meta['shard_sizes'])")
@@ -307,43 +316,62 @@ def _sched_weighted(rng, num_users, cohort, rounds, shard_sizes=None):
                      for _ in range(rounds)]).astype(np.int32)
 
 
-SCHEDULERS = {"full": _sched_full, "uniform": _sched_uniform,
-              "round_robin": _sched_round_robin, "weighted": _sched_weighted}
+register_scheduler("full", _sched_full)
+register_scheduler("uniform", _sched_uniform)
+register_scheduler("round_robin", _sched_round_robin)
+register_scheduler("weighted", _sched_weighted)
+
+# legacy alias: the live registry mapping (same dict object — entries
+# registered later through repro.core.spec.register_scheduler show up)
+SCHEDULERS = SCHEDULER_REGISTRY.entries
 
 
 def make_schedule(participation: str, num_users: int, cohort: int,
                   rounds: int, rng: np.random.Generator,
-                  shard_sizes=None) -> np.ndarray:
+                  shard_sizes=None, start: int = 0) -> np.ndarray:
     """(rounds, C) int32 cohort membership; every row is replacement-free
-    (a user appears at most once per round, so scatter rows never collide)."""
+    (a user appears at most once per round, so scatter rows never
+    collide).  ``start`` is the global index of the first generated
+    round: rng-driven schedulers consume their stream sequentially, so a
+    window generated at ``start=k`` from a generator that already
+    produced rounds [0, k) continues the full-run schedule exactly —
+    the property resumable sessions rely on."""
     assert 1 <= cohort <= num_users, (cohort, num_users)
-    sched = SCHEDULERS[participation](rng, num_users, cohort, rounds,
-                                      shard_sizes)
+    sched = resolve_scheduler(participation)(
+        rng, num_users, cohort, rounds, shard_sizes, start=start)
     assert sched.shape == (rounds, cohort)
     return sched
 
 
-def participation_weights(schedule: np.ndarray,
-                          num_users: int) -> np.ndarray:
+def participation_weights(schedule: np.ndarray, num_users: int, *,
+                          counts: np.ndarray | None = None,
+                          start_round: int = 0) -> np.ndarray:
     """(rounds, C) f32 adaptive combine weights from participation counts.
 
-    Opt-in fairness knob (``run_distgan(adaptive_server_scale=True)``):
+    Opt-in fairness knob (``CombineSpec(adaptive_server_scale=True)``):
     under partial participation a user drawn rarely contributes rarely,
     so its shard is under-represented in the server fold.  Each round,
     member u's raw weight is ``(expected + 1) / (count_u + 1)`` where
     ``count_u`` is u's prior participation count and ``expected = r*C/U``
-    is the uniform-scheduler expectation — under-participating users get
-    proportionally LARGER combine weight.  Weights are normalized to mean
-    1 over the cohort, so the server_scale of the fold is preserved (the
-    knob redistributes, it does not amplify).  Deterministic: derived
-    purely from the host-side schedule, so it costs nothing on device
-    beyond a (C,) multiply."""
+    is the uniform-scheduler expectation at global round r —
+    under-participating users get proportionally LARGER combine weight.
+    Weights are normalized to mean 1 over the cohort, so the
+    server_scale of the fold is preserved (the knob redistributes, it
+    does not amplify).  Deterministic: derived purely from the host-side
+    schedule, so it costs nothing on device beyond a (C,) multiply.
+
+    ``counts`` / ``start_round`` window the computation for resumable
+    sessions: pass the (U,) f64 participation counts accumulated over
+    rounds [0, start_round) and they are UPDATED IN PLACE as this
+    window's rounds are processed — weights for a run generated window
+    by window equal the single-shot full-run weights."""
     rounds, cohort = schedule.shape
-    counts = np.zeros(num_users, np.float64)
+    if counts is None:
+        counts = np.zeros(num_users, np.float64)
     out = np.empty((rounds, cohort), np.float32)
     for r in range(rounds):
         idx = schedule[r]
-        expected = r * cohort / num_users
+        expected = (start_round + r) * cohort / num_users
         w = (expected + 1.0) / (counts[idx] + 1.0)
         out[r] = (w / w.mean()).astype(np.float32)
         counts[idx] += 1.0
@@ -495,10 +523,15 @@ def combine_staleness_max_abs(deltas_stacked, ages=None, decay: float = 0.5):
 combine_staleness_mean.needs_ages = True
 combine_staleness_max_abs.needs_ages = True
 
-COMBINERS = {"max_abs": combine_max_abs, "mean": combine_mean,
-             "masked_mean": combine_masked_mean,
-             "staleness_mean": combine_staleness_mean,
-             "staleness_max_abs": combine_staleness_max_abs}
+register_combiner("max_abs", combine_max_abs)
+register_combiner("mean", combine_mean)
+register_combiner("masked_mean", combine_masked_mean)
+register_combiner("staleness_mean", combine_staleness_mean)
+register_combiner("staleness_max_abs", combine_staleness_max_abs)
+
+# legacy alias: the live registry mapping (same dict object — entries
+# registered later through repro.core.spec.register_combiner show up)
+COMBINERS = COMBINER_REGISTRY.entries
 
 
 # ---------------------------------------------------------------------------

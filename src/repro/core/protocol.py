@@ -1,109 +1,37 @@
-"""Round orchestration for Distributed-GAN training: host-side data
-sampling per user, participation scheduling (which logical users train
-each round), the scan-fused round engine (default) or the legacy per-step
-jit loop, metric/timing capture, and the paper's evaluation criteria
-(mode coverage, loss trend, wall-clock).
+"""Legacy round-orchestration entry point for Distributed-GAN training.
 
-Two residencies for the per-user state: the device-backed cohort path
-carries the (U, N) store through the scan (U bounded by accelerator
-memory), and the host-backed streamed path (``state_backend="host"``)
-keeps the store in pinned host buffers, moving only the scheduled
-cohort's C rows per round through ``stream_cohort_rounds`` — a
-double-buffered driver with an optional async bounded-staleness mode
-(``async_rounds``).
+The actual drivers live behind the spec layer now: a run is described by
+a declarative :class:`repro.core.spec.FederationSpec` (engine /
+participation / backend / combine sub-specs, all registry-resolved) and
+executed by :class:`repro.core.session.FederationSession`, which also
+offers incremental ``run(rounds)`` windows and msgpack
+``save``/``restore`` for fault-tolerant long runs.
+
+:func:`run_distgan` remains as a thin keyword shim for the original
+monolithic signature: it builds the equivalent ``FederationSpec``
+(warning on conflicting kwargs) and drives a fresh session for
+``steps`` rounds — trajectories are pinned bitwise to the explicit spec
+path in tests/test_spec.py.  This module also keeps the paper's
+evaluation criteria (loss trend, §5.5 wall-clock model) and re-exports
+the streaming driver pieces that moved to ``repro.core.session``.
 """
 
 from __future__ import annotations
 
-import collections
-import dataclasses
-import time
-import typing
+import warnings
 from typing import Callable
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.approaches import (DistGANConfig, DistGANState,
-                                   STEP_FACTORIES, d_flat_layout, init_state)
-from repro.core.engine import (CohortState, DEFAULT_ROUNDS_PER_JIT,
-                               _pad_to, cohort_state_to_full,
-                               init_cohort_state, init_host_backend,
-                               make_cohort_engine, make_cohort_rows_engine,
-                               make_engine)
-from repro.core.federated import (make_schedule, participation_weights,
-                                  upload_bytes_flat)
+from repro.core.approaches import DistGANConfig
+from repro.core.session import (FederationSession, RunResult,  # noqa: F401
+                                StreamStats, stream_cohort_rounds)
+from repro.core.spec import (BackendSpec, CombineSpec,  # noqa: F401
+                             DEFAULT_ROUNDS_PER_JIT, EngineSpec,
+                             FederationSpec, ParticipationSpec)
 from repro.data.federated import FederatedDataset
-
-
-# pre-stage the whole run's batches on device when below this (else the
-# fused engine samples/transfers chunk by chunk)
-_STAGE_CAP_BYTES = 256 * 1024 * 1024
-
-
-def _chunk_slice(staged, start: int, k: int, rpj: int):
-    """Device-side chunk ``[start, start+k)`` of a pre-staged round stack,
-    padded to ``rpj`` rounds by repeating the final round (padded rounds
-    are masked out and never touch the carry)."""
-    out = jax.lax.slice_in_dim(staged, start, start + k)
-    if k < rpj:
-        fill = jnp.broadcast_to(staged[-1:], (rpj - k,) + staged.shape[1:])
-        out = jnp.concatenate([out, fill], axis=0)
-    return out
-
-
-def _chunk_stack(batch_fn, start: int, k: int, rpj: int):
-    """Host-side chunk: sample rounds ``[start, start+k)``, pad to rpj
-    (same repeat-the-last-round convention as engine._pad_to)."""
-    block = _pad_to(np.stack([batch_fn(j) for j in range(start, start + k)]),
-                    rpj)
-    return jnp.asarray(block)
-
-
-def _valid_mask(k: int, rpj: int):
-    return jnp.asarray(np.arange(rpj) < k)
-
-
-def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
-    """Warmup + timed chunk loop shared by the fused and cohort drivers.
-
-    Every chunk is rpj rounds (padded + masked), so the whole run shares
-    ONE compiled program.  Returns ``(carry, chunks, compile_s, steady_s,
-    window_rates)``; ``window_rates`` holds per-round seconds of each
-    FULL post-warmup window — the remainder window is excluded because
-    its rate would over-count the masked padding rounds it still
-    computes."""
-    t0 = time.perf_counter()
-    carry, m0 = run_chunk(0, rpj, carry)
-    compile_s = time.perf_counter() - t0
-    chunks = [m0]
-
-    t1 = time.perf_counter()
-    i = rpj
-    window_rates = []
-    while i < steps:
-        k = min(rpj, steps - i)
-        tc = time.perf_counter()
-        carry, m = run_chunk(i, k, carry)
-        if k == rpj:
-            window_rates.append((time.perf_counter() - tc) / k)
-        chunks.append(m)
-        i += k
-    jax.block_until_ready(carry.g)
-    steady = time.perf_counter() - t1
-    return carry, chunks, compile_s, steady, window_rates
-
-
-@dataclasses.dataclass
-class RunResult:
-    g_losses: np.ndarray           # (steps,)
-    d_losses: np.ndarray           # (steps, U) — (steps, C) under cohorting
-    wall_time_s: float
-    step_time_s: float             # steady-state per-step (post-compile)
-    samples: np.ndarray | None
-    state: DistGANState
-    extra: dict
 
 
 def run_distgan(
@@ -126,503 +54,99 @@ def run_distgan(
     adaptive_server_scale: bool = False,
     materialize_state: bool = True,
 ) -> RunResult:
-    """Train with one of {approach1, approach2, approach3, baseline}.
+    """Train with a registered approach (approach1/2/3, baseline,
+    download_first, ...) for ``steps`` rounds.
 
-    ``engine="fused"`` (default) pre-stages ``rounds_per_jit`` rounds of
-    data on device and runs them as ONE scan-compiled XLA call (one
-    dispatch + one metrics sync per chunk).  ``engine="per_step"`` is the
-    legacy Python loop — one jit call and one host sync per round; both
-    produce bit-identical metric trajectories for a given seed (pinned in
-    tests/test_engine.py).
+    LEGACY SHIM.  Every keyword here is a field of
+    :class:`repro.core.spec.FederationSpec`; this function builds that
+    spec (see the kwargs→spec table in EXPERIMENTS.md) and drives a
+    one-shot :class:`repro.core.session.FederationSession`.  New code —
+    and anything needing incremental windows, checkpoint/resume, or a
+    serializable experiment manifest — should build the spec directly::
 
-    ``participation`` / ``cohort_size`` virtualize the user axis: the run
-    has ``fcfg.num_users`` LOGICAL users but each round only a scheduled
-    cohort of C users trains, and the compiled program is shaped by C
-    alone (repro.core.engine.make_cohort_engine).  Schedulers: ``full``
-    (everyone, C == U), ``uniform`` / ``weighted`` (random replacement-
-    free draws, the latter ∝ shard size), ``round_robin``.  Setting
-    ``cohort_size`` routes through the cohort engine even for
-    ``participation="full"`` — with C == U that trajectory is bit-
-    identical to the plain fused engine (pinned in tests/test_engine.py).
-    ``extra`` gains per-user ``participation_counts`` and final
-    ``staleness`` (rounds since each user last trained).
+        spec = FederationSpec(
+            approach="approach1", batch_size=64, seed=0,
+            participation=ParticipationSpec("uniform", cohort_size=8),
+            backend=BackendSpec("host", async_rounds=2),
+            combine=CombineSpec("staleness_mean", staleness_decay=0.9))
+        sess = FederationSession(pair, fcfg, dataset, spec)
+        result = sess.run(steps)         # resumable: sess.save(path)
 
-    ``state_backend`` picks where the per-user rows live between rounds:
-    ``"device"`` (default) carries the (U, N) CohortStore through the
-    scan — U bounded by accelerator memory, PR 2's regime; ``"host"``
-    keeps the store in pinned host NumPy buffers and STREAMS only the
-    scheduled cohort's C rows to device per round (U bounded by host
-    RAM).  The host driver double-buffers: round k+1's data chunk (and,
-    in async mode, its cohort rows) are staged via ``jax.device_put``
-    while round k computes; ``prefetch=False`` disables the overlap (the
-    perf-neutral knob the ``paper_stream`` benchmark gates against).
-    ``async_rounds=S > 0`` (host backend only) additionally lets round
-    k's scatter-back land up to S rounds late — bounded-staleness
-    asynchrony, with the lag surfaced through the ``last_round`` ages the
-    staleness-aware combiners consume.
+    Kwarg semantics (validated by the spec layer, which raises
+    ``ValueError``/``KeyError`` on conflicts or unknown registry keys):
 
-    ``adaptive_server_scale=True`` (approach 1, cohort runs) scales each
-    cohort member's uploaded delta by a participation-adaptive weight
-    (under-participating users count proportionally more; weights are
-    mean-1 normalized per round — core.federated.participation_weights).
+    * ``engine`` / ``rounds_per_jit`` → :class:`EngineSpec` — ``fused``
+      scan-compiles K rounds per XLA dispatch (padded+masked remainder
+      chunks share ONE program); ``per_step`` is the legacy jit loop;
+      both produce bit-identical trajectories (tests/test_engine.py).
+    * ``participation`` / ``cohort_size`` → :class:`ParticipationSpec` —
+      cohort virtualization: ``fcfg.num_users`` LOGICAL users, a
+      compiled program shaped by C alone.
+    * ``state_backend`` / ``async_rounds`` / ``prefetch`` /
+      ``materialize_state`` → :class:`BackendSpec` — where the (U, N)
+      user rows live (``device`` | ``host`` | ``spmd``) and the
+      streaming pipeline knobs.
+    * ``adaptive_server_scale`` (+ ``fcfg.combiner`` /
+      ``fcfg.staleness_decay``) → :class:`CombineSpec`.
 
-    ``materialize_state=False`` (host backend) skips unpacking the final
-    store into the stacked ``RunResult.state`` — that unpack puts the
-    whole (U, N) store on DEVICE, which defeats host residency exactly
-    when U is large enough to need it.  The run's state stays reachable
-    through ``extra["host_backend"]`` (gather rows, or ``.snapshot()``
-    on demand) and ``RunResult.state`` is None.
+    Conflicting kwarg combinations that used to resolve silently now
+    emit a ``DeprecationWarning`` before being resolved (e.g. a
+    ``cohort_size`` below U with the default ``participation="full"``
+    falls back to the ``uniform`` scheduler; ``prefetch=False`` on the
+    non-streaming device backend is ignored).
     """
-    assert approach in STEP_FACTORIES, approach
-    assert engine in ("fused", "per_step"), engine
-    assert state_backend in ("device", "host"), state_backend
-    assert async_rounds >= 0
-    if async_rounds:
-        assert state_backend == "host", \
-            "async_rounds needs state_backend='host' (the scan-compiled " \
-            "device path is synchronous by construction)"
-    if not materialize_state:
-        assert state_backend == "host", \
-            "materialize_state=False is a host-backend knob (the device " \
-            "backend's store is already device-resident)"
-    rng = np.random.default_rng(seed)
-
-    U, B = fcfg.num_users, batch_size
-
-    cohort_virtual = (cohort_size is not None or participation != "full"
-                      or state_backend == "host")
-    if adaptive_server_scale:
-        assert cohort_virtual and approach == "approach1", \
-            "adaptive_server_scale is an approach-1 combiner option " \
-            "(cohort runs)"
-    if cohort_virtual:
-        assert approach != "baseline", \
-            "baseline has no user axis to virtualize"
-        assert engine == "fused", "cohort virtualization needs the " \
-            "scan-fused engine (per_step compiles per-U programs)"
-        if state_backend == "host":
-            return _run_cohort_host(pair, fcfg, dataset, approach, steps, B,
-                                    seed, eval_samples, participation,
-                                    cohort_size or U, rng, async_rounds,
-                                    prefetch, adaptive_server_scale,
-                                    materialize_state)
-        return _run_cohort(pair, fcfg, dataset, approach, steps, B, seed,
-                           eval_samples, rounds_per_jit, participation,
-                           cohort_size or U, rng, adaptive_server_scale)
-
-    state = init_state(pair, fcfg, jax.random.key(seed),
-                       sync_ds=(approach == "approach1"))
-
-    def batch_np(step_i: int):
-        if approach == "baseline":
-            return np.asarray(dataset.union_sampler(rng, B))
-        return np.stack([np.asarray(dataset.user_batch(u, rng, B))
-                         for u in range(U)])
-
+    del sample_fn  # accepted for signature compatibility; never consumed
+    if (cohort_size is not None and participation == "full"
+            and cohort_size != fcfg.num_users):
+        warnings.warn(
+            f"run_distgan: cohort_size={cohort_size} conflicts with "
+            f"participation='full' (U={fcfg.num_users}); falling back to "
+            f"the 'uniform' scheduler.  Build a FederationSpec with an "
+            f"explicit ParticipationSpec instead.",
+            DeprecationWarning, stacklevel=2)
+        participation = "uniform"
+    if not prefetch and state_backend == "device":
+        warnings.warn(
+            "run_distgan: prefetch=False has no effect on the device "
+            "backend (it pre-stages whole chunks); ignoring.  Build a "
+            "FederationSpec with an explicit BackendSpec instead.",
+            DeprecationWarning, stacklevel=2)
+        prefetch = True
+    if engine == "per_step" and rounds_per_jit != DEFAULT_ROUNDS_PER_JIT:
+        warnings.warn(
+            "run_distgan: rounds_per_jit is ignored by the per_step "
+            "engine; ignoring.  Build a FederationSpec with an explicit "
+            "EngineSpec instead.",
+            DeprecationWarning, stacklevel=2)
+        rounds_per_jit = DEFAULT_ROUNDS_PER_JIT
     if engine == "fused":
-        eng = make_engine(pair, fcfg, approach)
-
-        # short runs: shrink the chunk so at least one post-warmup window
-        # exists (otherwise all rounds land in the compile chunk and
-        # step_time_s degenerates to ~0)
+        # the legacy short-run clamp: a one-shot run of `steps` rounds
+        # shrinks the chunk so at least one post-warmup timing window
+        # exists and no masked-padding compute is wasted.  The session
+        # itself never resizes chunks (fixed rpj is what makes windowed
+        # runs bitwise-invariant); for this single-window shim the clamp
+        # just picks the right fixed rpj up front, exactly as the old
+        # driver did.
         if steps > 1:
             rounds_per_jit = max(1, min(rounds_per_jit, steps // 2))
-        rpj = min(rounds_per_jit, steps)
+        rounds_per_jit = min(rounds_per_jit, max(steps, 1))
 
-        # Pre-stage the whole run on device when it fits (one transfer,
-        # chunks become device slices); otherwise sample/transfer chunk by
-        # chunk.  The rng call order is identical either way, so fused and
-        # per-step runs consume the same data streams.
-        saved_rng, rng = rng, np.random.default_rng(seed)  # throwaway rng
-        probe = batch_np(0)
-        rng = saved_rng
-        prestage = steps * probe.nbytes <= _STAGE_CAP_BYTES
-        if prestage:
-            staged = jnp.asarray(np.stack([batch_np(j)
-                                           for j in range(steps)]))
-
-        def run_chunk(start: int, k: int, state):
-            reals = (_chunk_slice(staged, start, k, rpj) if prestage
-                     else _chunk_stack(batch_np, start, k, rpj))
-            state, m = eng(state, reals, _valid_mask(k, rpj))
-            # one sync per chunk; padded rounds sliced off
-            return state, jax.tree.map(lambda x: np.asarray(x)[:k], m)
-
-        state, chunks, compile_s, steady, window_rates = _drive_chunks(
-            run_chunk, state, steps, rpj)
-
-        g_losses = np.concatenate([c["g_loss"] for c in chunks])
-        d_losses = np.concatenate([c["d_loss"] for c in chunks])
-        kept_frac = float(chunks[-1]["kept_frac"][-1])
-        kept_mean = float(np.mean(np.concatenate([c["kept_frac"]
-                                                  for c in chunks])))
-        step_denom = max(steps - rpj, 1)
-        min_step_s = min(window_rates) if window_rates else steady / step_denom
-    else:
-        # legacy loop, kept verbatim as the comparison target: per-round
-        # device staging, one jit dispatch and two host syncs per round.
-        step_fn = STEP_FACTORIES[approach](pair, fcfg)
-        g_list, d_list = [], []
-
-        def batch(step_i: int):
-            if approach == "baseline":
-                return jnp.asarray(dataset.union_sampler(rng, B))
-            return jnp.stack([jnp.asarray(dataset.user_batch(u, rng, B))
-                              for u in range(U)])
-
-        # warmup/compile on step 0's shapes
-        t0 = time.perf_counter()
-        state, metrics = step_fn(state, batch(0))
-        jax.block_until_ready(metrics["g_loss"])
-        compile_s = time.perf_counter() - t0
-
-        g_list.append(float(metrics["g_loss"]))
-        d_list.append(np.asarray(metrics["d_loss"]))
-
-        t1 = time.perf_counter()
-        round_times = []
-        for i in range(1, steps):
-            tr = time.perf_counter()
-            state, metrics = step_fn(state, batch(i))
-            g_list.append(float(metrics["g_loss"]))
-            d_list.append(np.asarray(metrics["d_loss"]))
-            round_times.append(time.perf_counter() - tr)
-        jax.block_until_ready(state.g)
-        steady = time.perf_counter() - t1
-
-        g_losses = np.asarray(g_list)
-        d_losses = np.stack(d_list)
-        kept_frac = float(metrics["kept_frac"])
-        kept_mean = kept_frac  # per-step loop tracks only the final round
-        step_denom = max(steps - 1, 1)
-        min_step_s = min(round_times) if round_times else steady
-
-    samples = None
-    if eval_samples:
-        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
-        samples = np.asarray(pair.g_apply(state.g, z))
-
-    return RunResult(
-        g_losses=g_losses,
-        d_losses=d_losses,
-        wall_time_s=compile_s + steady,
-        step_time_s=steady / step_denom,
-        samples=samples,
-        state=state,
-        extra={"compile_s": compile_s, "kept_frac": kept_frac,
-               "engine": engine,
-               # best post-warmup window: steady-state per-round time,
-               # robust to background load spikes (benchmarks use this)
-               "min_step_time_s": min_step_s,
-               # full participation: the per-round cohort is all U users
-               **_upload_accounting(pair, fcfg, approach, U, kept_mean)},
+    spec = FederationSpec(
+        approach=approach,
+        batch_size=batch_size,
+        seed=seed,
+        eval_samples=eval_samples,
+        engine=EngineSpec(kind=engine, rounds_per_jit=rounds_per_jit),
+        participation=ParticipationSpec(scheduler=participation,
+                                        cohort_size=cohort_size),
+        backend=BackendSpec(kind=state_backend, async_rounds=async_rounds,
+                            prefetch=prefetch,
+                            materialize_state=materialize_state),
+        combine=CombineSpec(combiner=fcfg.combiner,
+                            staleness_decay=fcfg.staleness_decay,
+                            adaptive_server_scale=adaptive_server_scale),
     )
-
-
-def _cohort_schedule(dataset, participation: str, U: int, C: int,
-                     steps: int, seed: int) -> np.ndarray:
-    """The cohort membership schedule, drawn from a SEPARATE rng stream so
-    that data sampling consumes the caller's ``rng`` exactly as the
-    full-participation path does — with ``participation="full"`` and
-    C == U the cohort trajectory is therefore bit-identical to the plain
-    fused engine (pinned in tests/test_engine)."""
-    shard_sizes = None
-    if isinstance(dataset.meta, dict):
-        shard_sizes = dataset.meta.get("shard_sizes")
-    sched_rng = np.random.default_rng([seed, 0x5EED])
-    return make_schedule(participation, U, C, steps, sched_rng, shard_sizes)
-
-
-def _upload_accounting(pair, fcfg: DistGANConfig, approach: str, C: int,
-                       kept_frac: float) -> dict:
-    """Cohort-aware per-round upload bytes: C members upload per round —
-    NOT the full population U.  Only approach 1 ships parameter deltas
-    across the privacy boundary; approaches 2/3 exchange logits/gradients
-    and the baseline nothing, so the key is absent there.  For the
-    data-dependent ``threshold`` policy, pass the RUN-MEAN measured kept
-    fraction (a single round's value misprices a drifting threshold)."""
-    if approach != "approach1":
-        return {}
-    n = d_flat_layout(pair).n
-    kf = kept_frac if fcfg.selection == "threshold" else None
-    per_user = upload_bytes_flat(n, fcfg.selection, fcfg.upload_frac,
-                                 kept_frac=kf)
-    return {"upload_bytes_per_user": per_user,
-            "upload_bytes_per_round": C * per_user}
-
-
-def _run_cohort(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
-                approach: str, steps: int, B: int, seed: int,
-                eval_samples: int, rounds_per_jit: int, participation: str,
-                cohort_size: int, rng: np.random.Generator,
-                adaptive: bool = False) -> RunResult:
-    """Cohort-virtualized run: U logical users, a C-wide compiled program
-    (see ``_cohort_schedule`` for the rng-stream discipline)."""
-    U, C = fcfg.num_users, cohort_size
-    schedule = _cohort_schedule(dataset, participation, U, C, steps, seed)
-    wts = participation_weights(schedule, U) if adaptive else None
-
-    cstate = init_cohort_state(pair, fcfg, jax.random.key(seed),
-                               sync_ds=(approach == "approach1"))
-    eng = make_cohort_engine(pair, fcfg, approach, adaptive=adaptive)
-
-    if steps > 1:
-        rounds_per_jit = max(1, min(rounds_per_jit, steps // 2))
-    rpj = min(rounds_per_jit, steps)
-
-    def batch_round(r: int):
-        return np.stack([np.asarray(dataset.user_batch(int(u), rng, B))
-                         for u in schedule[r]])
-
-    saved_rng, rng = rng, np.random.default_rng(seed)  # throwaway rng
-    probe = batch_round(0)
-    rng = saved_rng
-    prestage = steps * probe.nbytes <= _STAGE_CAP_BYTES
-    if prestage:
-        staged = jnp.asarray(np.stack([batch_round(j)
-                                       for j in range(steps)]))
-    sched_dev = jnp.asarray(schedule)
-    wts_dev = None if wts is None else jnp.asarray(wts)
-
-    def run_chunk(start: int, k: int, cstate):
-        reals = (_chunk_slice(staged, start, k, rpj) if prestage
-                 else _chunk_stack(batch_round, start, k, rpj))
-        idx = _chunk_slice(sched_dev, start, k, rpj)
-        w = None if wts_dev is None else _chunk_slice(wts_dev, start, k, rpj)
-        cstate, m = eng(cstate, reals, idx, wts=w, valid=_valid_mask(k, rpj))
-        return cstate, jax.tree.map(lambda x: np.asarray(x)[:k], m)
-
-    cstate, chunks, compile_s, steady, window_rates = _drive_chunks(
-        run_chunk, cstate, steps, rpj)
-
-    g_losses = np.concatenate([c["g_loss"] for c in chunks])
-    d_losses = np.concatenate([c["d_loss"] for c in chunks])
-    mean_age = np.concatenate([c["mean_age"] for c in chunks])
-    kept_frac = float(chunks[-1]["kept_frac"][-1])
-    kept_mean = float(np.mean(np.concatenate([c["kept_frac"]
-                                              for c in chunks])))
-    step_denom = max(steps - rpj, 1)
-    min_step_s = min(window_rates) if window_rates else steady / step_denom
-
-    samples = None
-    if eval_samples:
-        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
-        samples = np.asarray(pair.g_apply(cstate.g, z))
-
-    counts = np.bincount(schedule.ravel(), minlength=U)
-    staleness = steps - np.asarray(cstate.store.last_round)
-    return RunResult(
-        g_losses=g_losses,
-        d_losses=d_losses,
-        wall_time_s=compile_s + steady,
-        step_time_s=steady / step_denom,
-        samples=samples,
-        state=cohort_state_to_full(pair, fcfg, cstate),
-        extra={"compile_s": compile_s, "kept_frac": kept_frac,
-               "engine": "fused", "min_step_time_s": min_step_s,
-               "participation": participation, "cohort_size": C,
-               "schedule": schedule,
-               "participation_counts": counts,
-               "staleness": staleness,
-               "mean_age": mean_age,
-               "state_backend": "device",
-               "adaptive_server_scale": adaptive,
-               **({"participation_weights": wts} if adaptive else {}),
-               **_upload_accounting(pair, fcfg, approach, C, kept_mean)},
-    )
-
-
-class StreamStats(typing.NamedTuple):
-    retire_t: list    # perf_counter stamp when round r's scatter landed
-    stall_s: list     # host seconds blocked on the device for round r
-
-
-def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
-                         batch_fn: Callable, *, async_rounds: int = 0,
-                         prefetch: bool = True, wts: np.ndarray | None = None):
-    """Double-buffered streaming driver over a rows engine.
-
-    ``eng(shared, d_rows, opt_rows, ages, wts_row, real)`` is dispatched
-    once per round (``make_cohort_rows_engine`` or the SPMD
-    ``make_spmd_cohort_rows_engine`` — same signature); the per-user rows
-    live in ``backend`` (a UserStateBackend) and only the scheduled
-    cohort's C rows cross the host<->device boundary.
-
-    Pipeline structure per round k (JAX dispatch is asynchronous, so the
-    engine call returns immediately and the device computes in the
-    background):
-
-    * ``prefetch=True``: round k+1's data chunk is sampled and
-      ``jax.device_put`` while round k computes — the PR 1 "overlap host
-      staging with device compute" item extended to the streamed store.
-    * ``async_rounds == 0`` (synchronous): round k's updated rows are
-      fetched and scattered back BEFORE round k+1's rows are gathered, so
-      every gather sees a fully up-to-date store.
-    * ``async_rounds == S > 0`` (bounded staleness): up to S rounds may
-      be in flight — round k+1's rows are gathered from the store as-is
-      (round k's scatter may not have landed), so a member's row can be
-      at most S rounds stale.  Scatter is last-writer-wins and
-      ``last_round`` reflects LANDED rounds only, so the ages the
-      staleness-aware combiners see automatically include the pipeline
-      lag.
-
-    Returns ``(shared, metrics, stats)``: per-round metric dicts (host
-    numpy) and a ``StreamStats`` — ``retire_t[r]`` is the perf_counter
-    stamp at which round r's scatter-back landed, ``stall_s[r]`` the
-    host time spent BLOCKED on the device fetching round r's outputs.
-    The stall is the pipeline's figure of merit: synchronous staging
-    must stall for ~the whole device compute every round (the host has
-    nothing else to do), while the double-buffered/async modes stage
-    round k+1 under round k's compute and retire long-finished rounds —
-    stalls collapse toward zero (gated in benchmarks paper_stream).
-    """
-    steps = len(schedule)
-    metrics_out: list = [None] * steps
-    stats = StreamStats([0.0] * steps, [0.0] * steps)
-    inflight: collections.deque = collections.deque()
-
-    def stage_rows(r):
-        d_rows, o_rows, last = backend.gather_rows(schedule[r])
-        ages = np.asarray(r - np.asarray(last), np.int32)
-
-        def put(a):
-            # DeviceStateBackend hands back device-resident rows — pass
-            # them through untouched (forcing them through numpy would
-            # cost a D2H+H2D round-trip and a sync every round)
-            if isinstance(a, jax.Array):
-                return a
-            return jax.device_put(np.ascontiguousarray(a))
-
-        return put(d_rows), put(o_rows), jax.device_put(ages)
-
-    def stage_data(r):
-        return jax.device_put(np.asarray(batch_fn(r)))
-
-    def retire(keep: int):
-        while len(inflight) > keep:
-            rr, ii, nd, no, m = inflight.popleft()
-            t0 = time.perf_counter()
-            nd, no = np.asarray(nd), np.asarray(no)  # blocks on round rr
-            stats.stall_s[rr] = time.perf_counter() - t0
-            backend.scatter_rows(ii, nd, no, rr)
-            metrics_out[rr] = jax.tree.map(np.asarray, m)
-            stats.retire_t[rr] = time.perf_counter()
-
-    rows = stage_rows(0)
-    data = stage_data(0)
-    for r in range(steps):
-        w = None if wts is None else jnp.asarray(np.asarray(wts[r],
-                                                            np.float32))
-        shared, nd, no, m = eng(shared, rows[0], rows[1], rows[2], w, data)
-        inflight.append((r, np.asarray(schedule[r]), nd, no, m))
-        last = r + 1 == steps
-        if prefetch and not last:
-            data = stage_data(r + 1)       # overlaps round r's compute
-        # sync (async_rounds=0): blocks on round r itself, so the gather
-        # below sees a fully up-to-date store.  async (S>0): blocks only
-        # on rounds <= r-S (long since done) — round r stays in flight
-        # while r+1's rows are gathered from the bounded-stale store and
-        # its dispatch goes out without the device ever idling.
-        retire(async_rounds)
-        if not last:
-            rows = stage_rows(r + 1)
-        if not prefetch and not last:
-            data = stage_data(r + 1)       # serialized staging (no overlap)
-    retire(0)
-    return shared, metrics_out, stats
-
-
-def _run_cohort_host(pair, fcfg: DistGANConfig, dataset: FederatedDataset,
-                     approach: str, steps: int, B: int, seed: int,
-                     eval_samples: int, participation: str, cohort_size: int,
-                     rng: np.random.Generator, async_rounds: int,
-                     prefetch: bool, adaptive: bool,
-                     materialize_state: bool = True) -> RunResult:
-    """Host-resident streamed run: the (U, N) store lives in pinned host
-    NumPy buffers (HostStateBackend) and every round moves exactly C rows
-    each way — per-round cost is independent of U, which is bounded by
-    host RAM instead of accelerator memory."""
-    U, C = fcfg.num_users, cohort_size
-    schedule = _cohort_schedule(dataset, participation, U, C, steps, seed)
-    wts = participation_weights(schedule, U) if adaptive else None
-
-    shared, backend = init_host_backend(pair, fcfg, jax.random.key(seed),
-                                        sync_ds=(approach == "approach1"))
-    eng = make_cohort_rows_engine(pair, fcfg, approach)
-
-    def batch_round(r: int):
-        return np.stack([np.asarray(dataset.user_batch(int(u), rng, B))
-                         for u in schedule[r]])
-
-    t0 = time.perf_counter()
-    shared, mets, stats = stream_cohort_rounds(
-        eng, shared, backend, schedule, batch_round,
-        async_rounds=async_rounds, prefetch=prefetch, wts=wts)
-
-    retire_t = stats.retire_t
-    compile_s = retire_t[0] - t0
-    steady = retire_t[-1] - retire_t[0] if steps > 1 else 0.0
-    step_denom = max(steps - 1, 1)
-    # steady-state per-round estimate: min over sliding windows of retire
-    # stamps (robust to the compile round and background-load spikes)
-    W = max(1, min(8, (steps - 1) // 2))
-    rates = [(retire_t[i + W] - retire_t[i]) / W
-             for i in range(1, steps - W)]
-    min_step_s = min(rates) if rates else steady / step_denom
-
-    g_losses = np.asarray([float(m["g_loss"]) for m in mets])
-    d_losses = np.stack([np.asarray(m["d_loss"]) for m in mets])
-    mean_age = np.asarray([float(m["mean_age"]) for m in mets])
-    kept_frac = float(mets[-1]["kept_frac"])
-    kept_mean = float(np.mean([float(m["kept_frac"]) for m in mets]))
-
-    samples = None
-    if eval_samples:
-        z = pair.sample_z(jax.random.key(seed + 1), eval_samples)
-        samples = np.asarray(pair.g_apply(shared.g, z))
-
-    # unpacking the store into the stacked interop layout puts (U, N)
-    # buffers on DEVICE — opt out for U beyond accelerator memory (the
-    # regime this backend exists for); the host store stays reachable
-    # via extra["host_backend"]
-    state = None
-    if materialize_state:
-        cstate = CohortState(shared.g, shared.g_opt, backend.snapshot(),
-                             shared.server_d, shared.step, shared.key)
-        state = cohort_state_to_full(pair, fcfg, cstate)
-    counts = np.bincount(schedule.ravel(), minlength=U)
-    staleness = steps - backend.last_round
-    return RunResult(
-        g_losses=g_losses,
-        d_losses=d_losses,
-        wall_time_s=compile_s + steady,
-        step_time_s=steady / step_denom,
-        samples=samples,
-        state=state,
-        extra={"compile_s": compile_s, "kept_frac": kept_frac,
-               "engine": "fused", "min_step_time_s": min_step_s,
-               "participation": participation, "cohort_size": C,
-               "schedule": schedule,
-               "participation_counts": counts,
-               "staleness": staleness,
-               "mean_age": mean_age,
-               "state_backend": "host",
-               "host_backend": backend,
-               "async_rounds": async_rounds,
-               "prefetch": prefetch,
-               # mean host-blocked-on-device seconds per steady round:
-               # the pipeline's figure of merit.  The compile round AND
-               # the end-of-run drain (the final async_rounds retires
-               # block on still-running rounds by construction) are
-               # excluded — with them, an async run's "steady" stall
-               # would just be drain/steps and shrink with run length
-               "host_stall_s_per_round": float(np.mean(
-                   stats.stall_s[1:max(steps - async_rounds, 2)]))
-               if steps > 1 else 0.0,
-               "adaptive_server_scale": adaptive,
-               **({"participation_weights": wts} if adaptive else {}),
-               **_upload_accounting(pair, fcfg, approach, C, kept_mean)},
-    )
+    return FederationSession(pair, fcfg, dataset, spec).run(steps)
 
 
 def loss_trend(losses: np.ndarray, tail_frac: float = 0.25) -> float:
@@ -640,6 +164,8 @@ def measure_component_times(pair, fcfg, dataset, batch_size: int,
     t_base  — one baseline step (1 D update + 1 G update, batch B),
     t_d     — one D update alone (batch B).
     """
+    import time
+
     import jax
     from repro.core.approaches import _d_update_fn, _opts
     _, d_opt_def = _opts(fcfg)

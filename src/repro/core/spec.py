@@ -1,0 +1,386 @@
+"""Typed run-description layer for Distributed-GAN federation runs.
+
+A federation run used to be described by an ever-growing pile of
+``run_distgan(...)`` keyword arguments (engine, scheduler, backend,
+staleness knobs, ...).  This module replaces that with a declarative,
+serializable :class:`FederationSpec` — the MD-GAN / FedAvg-style split
+between the *model* configuration (``DistGANConfig``: sizes, learning
+rates, selection policy) and the *run* configuration (how rounds are
+scheduled, where per-user state lives, how uploads are combined):
+
+* :class:`EngineSpec`        — fused scan vs per-step jit, chunking;
+* :class:`ParticipationSpec` — cohort scheduler + width;
+* :class:`BackendSpec`       — where the (U, N) user rows live
+  (``device`` / ``host`` / ``spmd``), async staleness, prefetch;
+* :class:`CombineSpec`       — server fold + staleness/participation
+  weighting.
+
+Every sub-spec validates at construction and the whole spec round-trips
+through ``to_dict`` / ``from_dict`` (and JSON), so an experiment is a
+manifest, not a call site.
+
+Implementations are looked up in string-keyed registries
+(:func:`register_approach`, :func:`register_scheduler`,
+:func:`register_combiner`, :func:`register_backend`) populated by
+``repro.core.approaches`` / ``federated`` / ``session`` / ``spmd`` —
+new policies (e.g. the ``download_first`` sync variant) plug in without
+touching the drivers.  ``repro.core.session.FederationSession`` executes
+a spec; ``repro.core.protocol.run_distgan`` is a thin legacy shim that
+builds one.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Callable
+
+DEFAULT_ROUNDS_PER_JIT = 16
+
+_ENGINE_KINDS = ("fused", "per_step")
+
+
+# ---------------------------------------------------------------------------
+# Registries
+# ---------------------------------------------------------------------------
+
+_builtins_state = "unloaded"     # -> "loading" -> "loaded"
+
+
+def _load_builtins() -> None:
+    """Import the modules that register the built-in implementations.
+
+    Lazy so that this module has no repro.core imports at load time (it
+    sits at the bottom of the dependency chain).  The "loading" sentinel
+    keeps a resolve() issued while the imports are in progress from
+    recursing, but a FAILED import resets to "unloaded" so the real
+    ImportError resurfaces on the next lookup instead of a misleading
+    unknown-key error against a half-populated registry."""
+    global _builtins_state
+    if _builtins_state != "unloaded":
+        return
+    _builtins_state = "loading"
+    try:
+        import repro.core.approaches  # noqa: F401  (approaches registry)
+        import repro.core.federated   # noqa: F401  (schedulers + combiners)
+        import repro.core.session     # noqa: F401  (device/host backends)
+        import repro.core.spmd        # noqa: F401  (spmd backend)
+    except BaseException:
+        _builtins_state = "unloaded"
+        raise
+    _builtins_state = "loaded"
+
+
+class Registry:
+    """String-keyed implementation registry with hard error paths:
+    duplicate registration and unknown lookup both raise (no silent
+    shadowing, no fallback)."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self.entries: dict[str, Any] = {}
+
+    def register(self, name: str, value):
+        if not isinstance(name, str) or not name:
+            raise ValueError(f"{self.kind} key must be a non-empty string, "
+                             f"got {name!r}")
+        if name in self.entries:
+            raise ValueError(f"duplicate {self.kind} {name!r} "
+                             f"(already registered)")
+        self.entries[name] = value
+        return value
+
+    def unregister(self, name: str) -> None:
+        del self.entries[name]
+
+    def get(self, name: str):
+        _load_builtins()
+        try:
+            return self.entries[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{sorted(self.entries)}") from None
+
+    def names(self) -> list[str]:
+        _load_builtins()
+        return sorted(self.entries)
+
+    def __contains__(self, name: str) -> bool:
+        _load_builtins()
+        return name in self.entries
+
+
+APPROACH_REGISTRY = Registry("approach")
+SCHEDULER_REGISTRY = Registry("scheduler")
+COMBINER_REGISTRY = Registry("combiner")
+BACKEND_REGISTRY = Registry("backend")
+
+
+@dataclasses.dataclass(frozen=True)
+class ApproachDef:
+    """A registered training approach plus the metadata the drivers used
+    to hard-code in if/elif chains.
+
+    ``body_factory(pair, fcfg) -> body(state, real, ages=None,
+    weights=None)`` is the scan-able round function;
+    ``step_factory(pair, fcfg)`` its donated single-step jit.
+    ``sync_ds``  — local Ds start at the server weights (paper §3.1);
+    ``user_axis`` — the approach has a per-user axis to virtualize
+    (False only for the single-node baseline);
+    ``uploads``  — parameter deltas cross the privacy boundary, so the
+    run reports upload-byte accounting and may use adaptive combine
+    weights."""
+
+    name: str
+    body_factory: Callable
+    step_factory: Callable
+    sync_ds: bool = False
+    user_axis: bool = True
+    uploads: bool = False
+
+
+def register_approach(name: str, body_factory: Callable,
+                      step_factory: Callable, *, sync_ds: bool = False,
+                      user_axis: bool = True,
+                      uploads: bool = False) -> ApproachDef:
+    return APPROACH_REGISTRY.register(
+        name, ApproachDef(name, body_factory, step_factory,
+                          sync_ds=sync_ds, user_axis=user_axis,
+                          uploads=uploads))
+
+
+def register_scheduler(name: str, fn: Callable) -> Callable:
+    """``fn(rng, num_users, cohort, rounds, shard_sizes=None, start=0)
+    -> (rounds, cohort) int32`` — ``start`` is the global index of the
+    window's first round, so resumable sessions can generate schedule
+    windows incrementally."""
+    return SCHEDULER_REGISTRY.register(name, fn)
+
+
+def register_combiner(name: str, fn: Callable) -> Callable:
+    """Server fold over stacked ``(C, ...)`` delta trees; combiners that
+    consume participation ages carry ``fn.needs_ages = True``."""
+    return COMBINER_REGISTRY.register(name, fn)
+
+
+def register_backend(name: str, driver_cls, *, streams: bool = False):
+    """``driver_cls(session)`` builds a backend driver (see
+    ``repro.core.session``).  ``streams=True`` marks backends that move
+    cohort rows per round through ``stream_cohort_rounds`` — only those
+    support ``async_rounds`` / ``prefetch`` / ``materialize_state=False``.
+    """
+    return BACKEND_REGISTRY.register(
+        name, _BackendDef(name, driver_cls, streams))
+
+
+@dataclasses.dataclass(frozen=True)
+class _BackendDef:
+    name: str
+    driver_cls: Any
+    streams: bool
+
+
+def resolve_approach(name: str) -> ApproachDef:
+    return APPROACH_REGISTRY.get(name)
+
+
+def resolve_scheduler(name: str) -> Callable:
+    return SCHEDULER_REGISTRY.get(name)
+
+
+def resolve_combiner(name: str) -> Callable:
+    return COMBINER_REGISTRY.get(name)
+
+
+def resolve_backend(name: str) -> _BackendDef:
+    return BACKEND_REGISTRY.get(name)
+
+
+# ---------------------------------------------------------------------------
+# Spec layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineSpec:
+    """How rounds are compiled: ``fused`` scan-compiles
+    ``rounds_per_jit`` rounds into one XLA program (padded + validity-
+    masked remainder chunks, so any step count shares one program);
+    ``per_step`` is the legacy one-jit-call-per-round loop."""
+
+    kind: str = "fused"
+    rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT
+
+    def __post_init__(self):
+        if self.kind not in _ENGINE_KINDS:
+            raise ValueError(f"unknown engine kind {self.kind!r}; "
+                             f"choose from {_ENGINE_KINDS}")
+        if not isinstance(self.rounds_per_jit, int) or self.rounds_per_jit < 1:
+            raise ValueError(
+                f"rounds_per_jit must be a positive int, got "
+                f"{self.rounds_per_jit!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationSpec:
+    """Which logical users train each round: a registered ``scheduler``
+    draws a cohort of ``cohort_size`` members per round (``None`` means
+    all ``num_users``)."""
+
+    scheduler: str = "full"
+    cohort_size: int | None = None
+
+    def __post_init__(self):
+        resolve_scheduler(self.scheduler)  # raises on unknown
+        if self.cohort_size is not None and (
+                not isinstance(self.cohort_size, int)
+                or self.cohort_size < 1):
+            raise ValueError(f"cohort_size must be a positive int or None, "
+                             f"got {self.cohort_size!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Where the per-user (U, N) D/optimizer rows live between rounds.
+
+    ``device`` carries the store through the scan (U bounded by
+    accelerator memory); ``host`` keeps it in pinned NumPy buffers and
+    streams the scheduled cohort's C rows per round (U bounded by host
+    RAM); ``spmd`` is the host store feeding the mesh-sharded rows
+    engine (C bounded by device count, no (U, N) device buffer at all).
+    ``async_rounds=S`` lets a round's scatter-back land up to S rounds
+    late (bounded staleness); ``prefetch`` stages round k+1 under round
+    k's compute; ``materialize_state=False`` skips the final (U, N)
+    device unpack.  All three are streaming-backend knobs."""
+
+    kind: str = "device"
+    async_rounds: int = 0
+    prefetch: bool = True
+    materialize_state: bool = True
+
+    def __post_init__(self):
+        backend = resolve_backend(self.kind)  # raises on unknown
+        if not isinstance(self.async_rounds, int) or self.async_rounds < 0:
+            raise ValueError(f"async_rounds must be an int >= 0, got "
+                             f"{self.async_rounds!r}")
+        if not backend.streams:
+            if self.async_rounds:
+                raise ValueError(
+                    f"async_rounds needs a streaming backend (the "
+                    f"scan-compiled {self.kind!r} path is synchronous "
+                    f"by construction)")
+            if not self.materialize_state:
+                raise ValueError(
+                    f"materialize_state=False is a streaming-backend knob "
+                    f"(the {self.kind!r} backend's store is already "
+                    f"device-resident)")
+            if not self.prefetch:
+                raise ValueError(
+                    f"prefetch is a streaming-backend knob; the "
+                    f"{self.kind!r} backend pre-stages whole chunks")
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineSpec:
+    """How the server folds the cohort's uploads: a registered
+    ``combiner`` (the paper's argmax-|.|, FedAvg mean, or the
+    staleness-aware variants discounting by ``staleness_decay ** age``),
+    optionally with participation-adaptive per-member weights."""
+
+    combiner: str = "max_abs"
+    staleness_decay: float = 0.5
+    adaptive_server_scale: bool = False
+
+    def __post_init__(self):
+        resolve_combiner(self.combiner)  # raises on unknown
+        if not (0.0 < float(self.staleness_decay) <= 1.0):
+            raise ValueError(f"staleness_decay must be in (0, 1], got "
+                             f"{self.staleness_decay!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FederationSpec:
+    """Complete declarative description of one federation run (minus the
+    model pair / DistGANConfig and the dataset, which are runtime
+    objects).  Validated at construction; ``to_dict``/``to_json`` give a
+    reproducible experiment manifest and ``from_dict``/``from_json``
+    re-validate on the way back in."""
+
+    approach: str
+    batch_size: int = 64
+    seed: int = 0
+    eval_samples: int = 2048
+    engine: EngineSpec = dataclasses.field(default_factory=EngineSpec)
+    participation: ParticipationSpec = dataclasses.field(
+        default_factory=ParticipationSpec)
+    backend: BackendSpec = dataclasses.field(default_factory=BackendSpec)
+    combine: CombineSpec = dataclasses.field(default_factory=CombineSpec)
+
+    def __post_init__(self):
+        approach = resolve_approach(self.approach)  # raises on unknown
+        if not isinstance(self.batch_size, int) or self.batch_size < 1:
+            raise ValueError(f"batch_size must be a positive int, got "
+                             f"{self.batch_size!r}")
+        if not isinstance(self.eval_samples, int) or self.eval_samples < 0:
+            raise ValueError(f"eval_samples must be an int >= 0, got "
+                             f"{self.eval_samples!r}")
+        if not approach.user_axis and self.cohort_virtual:
+            raise ValueError(
+                f"approach {self.approach!r} has no user axis to "
+                f"virtualize (cohort scheduling / streaming backends "
+                f"need one)")
+        if self.cohort_virtual and self.engine.kind != "fused":
+            raise ValueError(
+                "cohort virtualization needs the scan-fused engine "
+                "(per_step compiles per-U programs)")
+        if self.combine.adaptive_server_scale and not (
+                approach.uploads and self.cohort_virtual):
+            raise ValueError(
+                "adaptive_server_scale is a combiner option for "
+                "delta-uploading approaches under cohort scheduling")
+
+    @property
+    def cohort_virtual(self) -> bool:
+        """Whether the run goes through the cohort-virtualized path (a
+        compiled width C that may be < U)."""
+        return (self.participation.cohort_size is not None
+                or self.participation.scheduler != "full"
+                or self.backend.kind != "device")
+
+    def cohort_size_for(self, num_users: int) -> int:
+        return (self.participation.cohort_size
+                if self.participation.cohort_size is not None else num_users)
+
+    def validate_against(self, num_users: int) -> None:
+        """Cross-checks that need the model config's user count."""
+        c = self.cohort_size_for(num_users)
+        if c > num_users:
+            raise ValueError(f"cohort_size {c} exceeds num_users "
+                             f"{num_users}")
+        if self.participation.scheduler == "full" and c != num_users:
+            raise ValueError(
+                f"'full' participation needs cohort_size == num_users "
+                f"(got C={c}, U={num_users}); pick a partial scheduler "
+                f"for C < U")
+
+    # -- serialization -----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FederationSpec":
+        d = dict(d)
+        for key, sub in (("engine", EngineSpec),
+                         ("participation", ParticipationSpec),
+                         ("backend", BackendSpec), ("combine", CombineSpec)):
+            if key in d and isinstance(d[key], dict):
+                d[key] = sub(**d[key])
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "FederationSpec":
+        return cls.from_dict(json.loads(s))

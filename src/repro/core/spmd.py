@@ -278,7 +278,10 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
         new_store = CohortStore(
             d_flat=jnp.where(part > 0, rows_d, store.d_flat),
             opt_flat=jnp.where(part > 0, rows_o, store.opt_flat),
-            last_round=jnp.where(part[:, 0] > 0, carry.step,
+            # re-zeroed age convention: stamp round+1 ("trained THROUGH
+            # this round"; 0 = never), matching make_cohort_engine and
+            # the streaming driver
+            last_round=jnp.where(part[:, 0] > 0, carry.step + 1,
                                  store.last_round))
         new_carry = CohortState(new_state.g, new_state.g_opt, new_store,
                                 new_state.server_d, new_state.step,
@@ -299,7 +302,7 @@ def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
     device at all, replicated or otherwise.  Where
     ``make_spmd_cohort_engine`` replicates the whole store on every
     device (U bounded by per-device memory), this engine pairs with a
-    host UserStateBackend via ``core.protocol.stream_cohort_rounds``: U
+    host UserStateBackend via ``core.session.stream_cohort_rounds``: U
     is bounded by host RAM and each round moves C rows across the
     host<->device boundary, C/devices rows per device.
 
@@ -355,6 +358,44 @@ def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
         return fn(shared, d_rows, o_rows, ages, wts, real)
 
     return jax.jit(step, donate_argnums=(0, 1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Spec-layer registration: the "spmd" streaming backend
+# ---------------------------------------------------------------------------
+
+from repro.core.session import HostStreamDriver as _HostStreamDriver  # noqa: E402,I001
+from repro.core.spec import register_backend  # noqa: E402
+
+
+class SpmdStreamDriver(_HostStreamDriver):
+    """Streaming backend with the cohort mapped onto the mesh ``users``
+    axis: the per-user store lives in the host backend exactly as for
+    ``BackendSpec(kind="host")``, but each round's C gathered rows arrive
+    SHARDED over the mesh (one member per slice) through
+    ``make_spmd_cohort_rows_engine`` — no (U, N) device buffer exists,
+    replicated or otherwise, and the device count bounds C.  Requires
+    ``FederationSession(..., mesh=...)`` with a ``users`` axis equal to
+    the cohort size."""
+
+    backend_name = "spmd"
+
+    def _make_engine(self):
+        sess = self.sess
+        if sess.mesh is None:
+            raise ValueError(
+                "BackendSpec(kind='spmd') needs FederationSession(mesh=...) "
+                "with a 'users' axis equal to the cohort size")
+        if sess.spec.approach not in ("approach1", "approach2", "approach3"):
+            raise ValueError(
+                f"the SPMD body families cover approach1/2/3; got "
+                f"{sess.spec.approach!r}")
+        return make_spmd_cohort_rows_engine(sess.pair, sess.fcfg, sess.mesh,
+                                            sess.spec.approach,
+                                            sess.cohort_size)
+
+
+register_backend("spmd", SpmdStreamDriver, streams=True)
 
 
 def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):

@@ -274,7 +274,7 @@ def test_cohort_program_width_is_C_not_U():
 
 def test_baseline_rejects_cohorting():
     ds = _ds(2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         run_distgan(PAIR, DistGANConfig(), ds, "baseline", steps=2,
                     batch_size=8, eval_samples=0, participation="uniform")
 
@@ -363,14 +363,14 @@ def test_adaptive_server_scale_end_to_end():
     assert np.all(np.isfinite(r_dev.g_losses))
 
 
-def test_adaptive_server_scale_requires_approach1_cohort():
+def test_adaptive_server_scale_requires_uploads_and_cohort():
     ds = _ds(4)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         run_distgan(PAIR, DistGANConfig(num_users=4), ds, "approach2",
                     steps=2, batch_size=8, eval_samples=0,
                     participation="uniform", cohort_size=2,
                     adaptive_server_scale=True)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         run_distgan(PAIR, DistGANConfig(num_users=4), ds, "approach1",
                     steps=2, batch_size=8, eval_samples=0,
                     adaptive_server_scale=True)

@@ -189,9 +189,11 @@ def test_async_disjoint_cohorts_equals_sync():
 
 def test_async_overlap_bounded_staleness_ages():
     """Full participation with U == C == 2: every member is in flight when
-    re-drawn, so with async_rounds=S the steady-state age is S+1 (the
-    gather sees a store S+1 rounds behind) — surfaced through mean_age,
-    consumed by the staleness combiners, and the run stays finite."""
+    re-drawn, so with async_rounds=S the steady-state age is S (the
+    gather sees a store lagging by the pipeline depth) — surfaced through
+    mean_age, consumed by the staleness combiners, and the run stays
+    finite.  Ages follow the re-zeroed convention: a member that trained
+    last round (and whose scatter landed) carries age 0."""
     ds = _ds(2)
     fcfg = DistGANConfig(num_users=2, selection="topk", upload_frac=0.3,
                          combiner="staleness_mean")
@@ -199,21 +201,23 @@ def test_async_overlap_bounded_staleness_ages():
               state_backend="host")
     r_sync = run_distgan(PAIR, fcfg, ds, "approach1", **kw)
     r_async = run_distgan(PAIR, fcfg, ds, "approach1", async_rounds=1, **kw)
-    # sync steady-state age is 1 (trained last round); async lags by S
-    assert np.all(r_sync.extra["mean_age"][1:] == 1.0)
+    # sync steady-state age is 0 (trained last round, scatter landed);
+    # async lags by S
+    assert np.all(r_sync.extra["mean_age"] == 0.0)
     np.testing.assert_array_equal(r_async.extra["mean_age"][:4],
-                                  [0.0, 1.0, 2.0, 2.0])
-    assert np.all(r_async.extra["mean_age"][2:] == 2.0)
+                                  [0.0, 1.0, 1.0, 1.0])
+    assert np.all(r_async.extra["mean_age"][1:] == 1.0)
     assert np.all(np.isfinite(r_async.g_losses))
     # stale rows genuinely change the trajectory
     assert not np.array_equal(r_sync.g_losses, r_async.g_losses)
-    # final last_round reflects every landed scatter (drain at the end)
-    assert np.all(r_async.extra["staleness"] == 1)
+    # final last_round reflects every landed scatter (drain at the end):
+    # everyone trained through the final round -> staleness 0
+    assert np.all(r_async.extra["staleness"] == 0)
 
 
 def test_async_rejects_device_backend():
     ds = _ds(2)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError):
         run_distgan(PAIR, DistGANConfig(), ds, "approach1", steps=2,
                     batch_size=8, eval_samples=0, async_rounds=1)
 

@@ -526,6 +526,103 @@ def paper_stream():
 
 
 # ---------------------------------------------------------------------------
+# Multi-tenant generation serving (PR 5 tentpole)
+# ---------------------------------------------------------------------------
+
+def paper_serve():
+    """Serving the trained generator (paper §7: "provide model for users
+    who lack computing power") at a mixed request-size workload.
+
+    Gates: (1) the bucketed micro-batched service must deliver >= 3x the
+    samples/s of the naive one-jit-dispatch-per-request loop (which gets
+    a per-size program cache, so the comparison is pure dispatch/sync/
+    coalescing — not compile time); (2) the service's compiled request
+    programs are bounded by the bucket ladder, NOT by the number of
+    requests or distinct sizes; (3) a served request's bytes equal its
+    solo replay — batch composition is invisible (per-request RNG
+    isolation).  Both sides timed as best-of-``reps`` interleaved passes
+    (min = the steady-state estimator on this 2-core box)."""
+    from repro.core.approaches import DistGANConfig
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+    from repro.core.session import FederationSession
+    from repro.core.spec import FederationSpec, ServeSpec
+    from repro.serve import GenerationService
+    from repro.serve.sampler import SamplerEngine
+
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                      d_hidden=16))
+    ds, _ = _ring()
+    fcfg = DistGANConfig(num_users=2, selection="topk", upload_frac=0.5)
+    spec = FederationSpec(approach="approach1", batch_size=32,
+                          eval_samples=0,
+                          serve=ServeSpec(max_batch=128, flush_ms=0.5))
+    sess = FederationSession(pair, fcfg, ds, spec)
+    sess.run(4)
+    g = sess.generator_params()
+
+    n_req = 200 if QUICK else 600
+    reps = 3 if QUICK else 5
+    rng = np.random.default_rng(SEED)
+    sizes = rng.integers(1, 13, n_req)
+    seeds = rng.integers(0, 2**31, n_req)
+    total = int(sizes.sum())
+
+    svc = GenerationService.from_session(sess)
+    # the naive side still gets a program per DISTINCT size (fair: no
+    # recompiles in the timed loop) — it pays one dispatch + one host
+    # sync per request
+    naive = SamplerEngine(pair, sorted(set(int(s) for s in sizes)))
+
+    def run_naive():
+        for i, (n, s) in enumerate(zip(sizes, seeds)):
+            n = int(n)
+            np.asarray(naive.sample_bucket(
+                g, n, [int(s)] * n, [i] * n, np.arange(n)))
+
+    def run_bucketed(base_rid):
+        futs = [svc.submit(int(i % 8), int(n), seed=int(s),
+                           request_id=base_rid + i)
+                for i, (n, s) in enumerate(zip(sizes, seeds))]
+        svc.drain()
+        return futs
+
+    run_naive()                      # compile the per-size programs
+    futs = run_bucketed(0)           # compile the bucket programs
+    t_naive = t_buck = float("inf")
+    for r in range(reps):            # interleaved, best-of
+        t0 = time.perf_counter()
+        run_naive()
+        t_naive = min(t_naive, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        futs = run_bucketed((r + 1) * n_req)
+        t_buck = min(t_buck, time.perf_counter() - t0)
+
+    # determinism: served bytes == solo replay bytes for a mid-workload
+    # request, regardless of who shared its buckets
+    j = n_req // 2
+    served = futs[j].result()
+    rep_rid = reps * n_req + j
+    det = np.array_equal(served,
+                         svc.replay(int(seeds[j]), rep_rid, int(sizes[j])))
+    n_buckets = len(svc.serve.buckets())
+    compile_ok = svc.engine.compile_count <= n_buckets
+    bat = svc.batcher.stats
+
+    emit("paper_serve/naive_per_request", t_naive / total * 1e6,
+         f"requests={n_req};samples={total};"
+         f"programs={len(naive._request_progs)};dispatches={n_req}")
+    emit("paper_serve/bucketed_microbatch", t_buck / total * 1e6,
+         f"requests={n_req};samples={total};"
+         f"programs={svc.engine.compile_count};buckets={n_buckets};"
+         f"pad_frac={bat['padded_slots'] / max(bat['dispatched_slots'], 1):.3f}")
+    sp = t_naive / t_buck
+    emit("paper_serve/serve_speedup", 0.0,
+         f"x{sp:.2f};samples_per_s={total / t_buck:,.0f};"
+         f"compile_le_buckets={int(compile_ok)};deterministic={int(det)};"
+         f"pass={int(sp >= 3.0 and compile_ok and det)}")
+
+
+# ---------------------------------------------------------------------------
 # Cross-user bandwidth: the paper's selective upload, bandwidth-true
 # (EXPERIMENTS.md §Perf pair C iter 5)
 # ---------------------------------------------------------------------------
@@ -662,15 +759,17 @@ BENCHES = {
     "paper_collapse": paper_collapse,
     "paper_cohort": paper_cohort,
     "paper_stream": paper_stream,
+    "paper_serve": paper_serve,
     "paper_bandwidth": paper_bandwidth,
     "kernels_micro": kernels_micro,
     "roofline_table": roofline_table,
 }
 
 # --quick smoke gate (<~3 min): fused-engine comparison, kernel micro,
-# the cohort U-independence check, and the host-store streaming gates
+# the cohort U-independence check, the host-store streaming gates, and
+# the serving micro-batching gate
 QUICK_BENCHES = ["paper_time", "kernels_micro", "paper_cohort",
-                 "paper_stream"]
+                 "paper_stream", "paper_serve"]
 
 
 def write_bench_json(path: str = BENCH_JSON) -> None:

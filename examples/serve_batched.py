@@ -1,6 +1,8 @@
 """Batched serving demo: decode a batch of requests with the KV/state
 cache for three different cache families (dense GQA ring-buffer window,
-SSM constant-state, MLA compressed).
+SSM constant-state, MLA compressed) — the decode loop itself is the
+shared ``repro.launch.serve.greedy_decode`` helper (one implementation,
+CLI and example both use it).
 
   PYTHONPATH=src python examples/serve_batched.py
 """
@@ -8,9 +10,9 @@ SSM constant-state, MLA compressed).
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
+from repro.launch.serve import cache_nbytes, greedy_decode
 from repro.models import model as M
 
 
@@ -19,22 +21,10 @@ def serve(arch: str, batch=4, prompt_len=16, gen=16):
     params = M.init_params(cfg, jax.random.key(0))
     prompt = jax.random.randint(jax.random.key(1), (batch, prompt_len), 0,
                                 cfg.vocab_size)
-    cache = M.init_cache(cfg, batch, prompt_len + gen)
-    step = jax.jit(lambda p, c, t, i: M.decode_step(p, c, t, i, cfg))
-
     t0 = time.perf_counter()
-    tok = prompt[:, 0:1]
-    out = []
-    for i in range(prompt_len + gen - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(i))
-        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
-        tok = prompt[:, i + 1:i + 2] if i + 1 < prompt_len else nxt
-        if i + 1 >= prompt_len:
-            out.append(nxt)
-    gen_toks = jax.device_get(jnp.concatenate(out, axis=1))
+    gen_toks = jax.device_get(greedy_decode(cfg, params, prompt, gen))
     dt = time.perf_counter() - t0
-    cache_bytes = sum(x.size * x.dtype.itemsize
-                      for x in jax.tree.leaves(cache))
+    cache_bytes = cache_nbytes(cfg, batch, prompt_len + gen)
     print(f"{arch:22s} cache={cache_bytes/1e6:6.2f}MB "
           f"{batch * gen / dt:6.1f} tok/s  first: {gen_toks[0, :8].tolist()}")
 

@@ -80,6 +80,36 @@ class RunResult:
     extra: dict
 
 
+def _merge_results(parts: list) -> RunResult:
+    """Merge consecutive sub-window RunResults (the autosave path) into
+    one window-shaped result: time series concatenate, counts sum, and
+    point-in-time fields (final state/samples/staleness) come from the
+    last sub-window."""
+    if len(parts) == 1:
+        return parts[0]
+    extra = dict(parts[-1].extra)
+    for key in ("mean_age", "schedule", "participation_weights"):
+        if all(key in p.extra for p in parts):
+            extra[key] = np.concatenate([p.extra[key] for p in parts])
+    if all("participation_counts" in p.extra for p in parts):
+        extra["participation_counts"] = np.sum(
+            [p.extra["participation_counts"] for p in parts], axis=0)
+    if all("compile_s" in p.extra for p in parts):
+        extra["compile_s"] = float(sum(p.extra["compile_s"]
+                                       for p in parts))
+    if all("min_step_time_s" in p.extra for p in parts):
+        extra["min_step_time_s"] = min(p.extra["min_step_time_s"]
+                                       for p in parts)
+    return RunResult(
+        g_losses=np.concatenate([p.g_losses for p in parts]),
+        d_losses=np.concatenate([p.d_losses for p in parts]),
+        wall_time_s=sum(p.wall_time_s for p in parts),
+        step_time_s=parts[-1].step_time_s,
+        samples=parts[-1].samples,
+        state=parts[-1].state,
+        extra=extra)
+
+
 # ---------------------------------------------------------------------------
 # Chunk helpers shared by the scan-fused drivers
 # ---------------------------------------------------------------------------
@@ -307,6 +337,19 @@ class BackendDriver:
     def load_arrays(self, tree) -> None:
         raise NotImplementedError
 
+    # -- serve handles (repro.serve reads live training state) -------------
+
+    def generator_params(self):
+        """The current generator parameter tree — the artifact the serve
+        layer publishes (paper §7: the platform 'provide[s] model for
+        users who lack computing power')."""
+        raise NotImplementedError
+
+    def user_d_flat(self, user_id: int) -> np.ndarray:
+        """One user's flat (Nd,) discriminator row (FlatLayout order) —
+        the serve layer's per-user rejection filter scores with it."""
+        raise NotImplementedError
+
 
 def _pack_key(state):
     return state._replace(key=jax.random.key_data(state.key))
@@ -379,6 +422,23 @@ class DeviceBackendDriver(BackendDriver):
 
     def load_arrays(self, tree) -> None:
         self._state = _unpack_key(jax.tree.map(jnp.asarray, tree))
+
+    # -- serve handles -----------------------------------------------------
+
+    def generator_params(self):
+        if self._state is None:
+            raise RuntimeError("driver state not materialized (restore in "
+                               "progress) — nothing to serve yet")
+        return self._state.g
+
+    def user_d_flat(self, user_id: int) -> np.ndarray:
+        if self._state is None:
+            raise RuntimeError("driver state not materialized (restore in "
+                               "progress) — nothing to serve yet")
+        if self.mode == "cohort":
+            return np.asarray(self._state.store.d_flat[user_id])
+        row = jax.tree.map(lambda x: x[user_id], self._state.ds)
+        return np.asarray(d_flat_layout(self.sess.pair).flatten(row))
 
     # -- execution ---------------------------------------------------------
 
@@ -639,6 +699,21 @@ class HostStreamDriver(BackendDriver):
                                         np.asarray(tree["opt_flat"]),
                                         np.asarray(tree["last_round"]))
 
+    # -- serve handles -----------------------------------------------------
+
+    def generator_params(self):
+        if self.shared is None:
+            raise RuntimeError("driver state not materialized (restore in "
+                               "progress) — nothing to serve yet")
+        return self.shared.g
+
+    def user_d_flat(self, user_id: int) -> np.ndarray:
+        if self.backend is None:
+            raise RuntimeError("driver state not materialized (restore in "
+                               "progress) — nothing to serve yet")
+        d_rows, _, _ = self.backend.gather_rows(np.asarray([user_id]))
+        return np.asarray(d_rows[0])
+
     # -- execution ---------------------------------------------------------
 
     def run(self, rounds: int) -> RunResult:
@@ -856,10 +931,34 @@ class FederationSession:
         z = self.pair.sample_z(jax.random.key(self.spec.seed + 1), n)
         return np.asarray(self.pair.g_apply(g_params, z))
 
+    # -- serve handles -----------------------------------------------------
+
+    def generator_params(self):
+        """The live generator parameter tree — what
+        ``repro.serve.GenerationService`` publishes (and re-publishes on
+        ``refresh``) to sample requests."""
+        return self._driver.generator_params()
+
+    def user_d_flat(self, user_id: int) -> np.ndarray:
+        """User ``user_id``'s flat (Nd,) discriminator row, gathered from
+        whichever backend holds the store (device carry, host NumPy
+        buffers, or the streamed SPMD store).  The serve layer's
+        per-user rejection filter scores candidate samples with it;
+        approaches without a per-user axis have no rows to gather."""
+        if not self.approach.user_axis:
+            raise ValueError(
+                f"approach {self.spec.approach!r} keeps no per-user "
+                f"discriminator rows (no user axis)")
+        if not 0 <= int(user_id) < self.fcfg.num_users:
+            raise ValueError(f"user_id {user_id} out of range "
+                             f"[0, {self.fcfg.num_users})")
+        return np.asarray(self._driver.user_d_flat(int(user_id)))
+
     # -- execution ---------------------------------------------------------
 
-    def run(self, rounds: int, *,
-            eval_samples: int | None = None) -> RunResult:
+    def run(self, rounds: int, *, eval_samples: int | None = None,
+            autosave_every: int | None = None,
+            autosave_path: str | None = None) -> RunResult:
         """Advance the federation by ``rounds`` rounds; returns the
         window's RunResult (schedule/counts/metrics are window-local,
         ``staleness`` is against the post-window global round).
@@ -876,8 +975,39 @@ class FederationSession:
         (eval runs at the end of every window; pass 0 for intermediate
         windows of a long drive to skip the generator sampling, or set
         the spec's ``eval_samples=0`` and request samples only on the
-        final window)."""
+        final window).
+
+        ``autosave_every=N`` (with ``autosave_path``) checkpoints the
+        session via :meth:`save` every N rounds at internal window
+        boundaries — a long ``run()`` killed mid-way resumes from the
+        last autosave and, because windowing is trajectory-neutral for
+        synchronous pipelines, reproduces the uninterrupted trajectory
+        (async streams re-sync at each autosave boundary, same drain
+        semantics as manual windowing).  Generator eval runs only on the
+        final sub-window; the returned RunResult is the merged whole
+        window."""
         assert isinstance(rounds, int) and rounds >= 1, rounds
+        if autosave_every is None:
+            return self._run_window(rounds, eval_samples)
+        if not isinstance(autosave_every, int) or autosave_every < 1:
+            raise ValueError(f"autosave_every must be a positive int, got "
+                             f"{autosave_every!r}")
+        if not autosave_path:
+            raise ValueError("autosave_every needs an autosave_path to "
+                             "save into")
+        parts = []
+        done = 0
+        while done < rounds:
+            k = min(autosave_every, rounds - done)
+            last = done + k == rounds
+            parts.append(self._run_window(
+                k, eval_samples if last else 0))
+            done += k
+            self.save(autosave_path)
+        return _merge_results(parts)
+
+    def _run_window(self, rounds: int,
+                    eval_samples: int | None) -> RunResult:
         self._eval_override = eval_samples
         self._mid_window = True
         result = self._driver.run(rounds)
@@ -934,7 +1064,9 @@ class FederationSession:
         """Rebuild a session from ``save(path)`` in a (possibly fresh)
         process.  ``pair`` / ``fcfg`` / ``dataset`` are the runtime
         objects the manifest cannot serialize and must match the saving
-        run; the spec itself comes from the checkpoint."""
+        run; the spec itself comes from the checkpoint.  ``dataset=None``
+        restores a serve-only session (repro.serve reads the generator
+        and store rows; ``run`` needs a real dataset)."""
         with open(os.path.join(path, _SESSION_META)) as f:
             meta = json.load(f)
         if meta["num_users"] != fcfg.num_users:

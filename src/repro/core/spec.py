@@ -299,12 +299,91 @@ class CombineSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """How a trained generator is served (repro.serve): requests of any
+    size run through a small set of padded power-of-two batch buckets —
+    the service compiles O(log max_batch) programs total, never one per
+    request size.
+
+    ``max_batch``   — the largest bucket (must be a power of two when
+                      ``bucket_sizes`` is not given; buckets are then
+                      1, 2, 4, ..., max_batch);
+    ``bucket_sizes``— explicit ascending bucket widths (overrides the
+                      power-of-two derivation; need not be powers of 2);
+    ``flush_ms``    — micro-batcher deadline: a partial bucket is
+                      dispatched once its oldest request has waited this
+                      long (milliseconds);
+    ``oversample``  — candidate factor for the per-user discriminator-
+                      scored rejection filter (k*n candidates keep n)."""
+
+    max_batch: int = 64
+    bucket_sizes: tuple | None = None
+    flush_ms: float = 2.0
+    oversample: int = 4
+
+    def __post_init__(self):
+        if self.bucket_sizes is not None:
+            # JSON round-trips tuples as lists; normalize on the way in
+            object.__setattr__(self, "bucket_sizes",
+                               tuple(self.bucket_sizes))
+            bs = self.bucket_sizes
+            if not bs or any(not isinstance(b, int) or b < 1 for b in bs) \
+                    or list(bs) != sorted(set(bs)):
+                raise ValueError(
+                    f"bucket_sizes must be strictly ascending positive "
+                    f"ints, got {self.bucket_sizes!r}")
+            object.__setattr__(self, "max_batch", bs[-1])
+        if not isinstance(self.max_batch, int) or self.max_batch < 1:
+            raise ValueError(f"max_batch must be a positive int, got "
+                             f"{self.max_batch!r}")
+        if self.bucket_sizes is None and self.max_batch & (
+                self.max_batch - 1):
+            raise ValueError(
+                f"max_batch must be a power of two when bucket_sizes is "
+                f"not given (got {self.max_batch}); pass explicit "
+                f"bucket_sizes for other ladders")
+        if not (float(self.flush_ms) >= 0.0):
+            raise ValueError(f"flush_ms must be >= 0, got "
+                             f"{self.flush_ms!r}")
+        if not isinstance(self.oversample, int) or self.oversample < 1:
+            raise ValueError(f"oversample must be a positive int, got "
+                             f"{self.oversample!r}")
+
+    def buckets(self) -> tuple:
+        """The bucket ladder, ascending."""
+        if self.bucket_sizes is not None:
+            return self.bucket_sizes
+        out, b = [], 1
+        while b <= self.max_batch:
+            out.append(b)
+            b *= 2
+        return tuple(out)
+
+
+def _sub_spec(cls, d: dict, section: str):
+    """Build a sub-spec from a manifest dict, rejecting unknown keys with
+    an error that names them (a typo'd manifest key must not silently
+    fall back to the default)."""
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - fields)
+    if unknown:
+        raise ValueError(
+            f"unknown key(s) {unknown} in {section!r} spec section; "
+            f"valid keys: {sorted(fields)}")
+    return cls(**d)
+
+
+@dataclasses.dataclass(frozen=True)
 class FederationSpec:
     """Complete declarative description of one federation run (minus the
     model pair / DistGANConfig and the dataset, which are runtime
     objects).  Validated at construction; ``to_dict``/``to_json`` give a
     reproducible experiment manifest and ``from_dict``/``from_json``
-    re-validate on the way back in."""
+    re-validate on the way back in.
+
+    ``serve`` is optional (``None`` = serving defaults): it describes how
+    the trained generator is served (repro.serve.GenerationService reads
+    it from a restored session's manifest), not how training runs."""
 
     approach: str
     batch_size: int = 64
@@ -315,6 +394,7 @@ class FederationSpec:
         default_factory=ParticipationSpec)
     backend: BackendSpec = dataclasses.field(default_factory=BackendSpec)
     combine: CombineSpec = dataclasses.field(default_factory=CombineSpec)
+    serve: ServeSpec | None = None
 
     def __post_init__(self):
         approach = resolve_approach(self.approach)  # raises on unknown
@@ -373,9 +453,10 @@ class FederationSpec:
         d = dict(d)
         for key, sub in (("engine", EngineSpec),
                          ("participation", ParticipationSpec),
-                         ("backend", BackendSpec), ("combine", CombineSpec)):
+                         ("backend", BackendSpec), ("combine", CombineSpec),
+                         ("serve", ServeSpec)):
             if key in d and isinstance(d[key], dict):
-                d[key] = sub(**d[key])
+                d[key] = _sub_spec(sub, d[key], key)
         return cls(**d)
 
     def to_json(self) -> str:

@@ -1,5 +1,9 @@
 """Serving launcher: batched greedy decode against the KV/state cache.
 
+``greedy_decode`` / ``cache_nbytes`` are the one shared implementation
+of the LM serving loop — the CLI below and ``examples/serve_batched.py``
+both drive them (the loop used to be copy-pasted between the two).
+
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
       --batch 4 --prompt-len 32 --gen 32
 """
@@ -38,6 +42,13 @@ def greedy_decode(cfg, params, prompt, gen_len: int, *, src_embeds=None):
         if i + 1 >= S0:
             out.append(nxt)
     return jnp.concatenate(out, axis=1)
+
+
+def cache_nbytes(cfg, batch: int, seq_len: int) -> int:
+    """Decode-cache footprint for a (batch, seq_len) serving shape, from
+    the abstract cache spec (nothing is allocated)."""
+    return sum(s.size * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(M.cache_spec(cfg, batch, seq_len)))
 
 
 def main():

@@ -1,0 +1,9 @@
+"""Multi-tenant generation serving over a FederationSession: bucketed
+sampler engine, micro-batching scheduler, hot-swappable service."""
+
+from repro.serve.sampler import SamplerEngine
+from repro.serve.scheduler import MicroBatcher, SampleRequest
+from repro.serve.service import GenerationService
+
+__all__ = ["SamplerEngine", "MicroBatcher", "SampleRequest",
+           "GenerationService"]

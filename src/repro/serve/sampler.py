@@ -1,0 +1,212 @@
+"""Shape-bucketed batched sampler engine over a trained generator.
+
+The serving problem: requests arrive with arbitrary sample counts, and a
+jit-compiled program is shaped by its batch size — one program per
+request size would compile O(#distinct sizes) programs and stall every
+novel size on XLA.  Instead every dispatch runs through a small ladder
+of padded batch **buckets** (power-of-two by default, from
+``repro.core.spec.ServeSpec``): a batch of k slots is padded to the
+smallest bucket >= k with a ``valid`` mask (the PR 2 pad-with-mask
+idiom), so the engine compiles at most ``len(buckets)`` programs per
+program family, ever.
+
+Two sampling modes:
+
+* **request-keyed** (``sample_bucket``) — every slot carries its own
+  ``(seed, request_id, sample_index)`` triple and derives its PRNG key
+  inside the program via ``fold_in`` chains.  A slot's sample is a pure
+  function of ``(generator params, seed, request_id, sample_index)`` —
+  independent of its batch-mates, the bucket it lands in, and how the
+  scheduler chunked the request — which is what makes served samples
+  deterministic and replayable (``repro.serve.scheduler`` relies on
+  this; pinned in tests/test_serve.py).  The generator is applied
+  **row-wise under vmap** so even batch-coupled generator ops (the conv
+  pair's BatchNorm) cannot couple batch-mates.
+* **bulk stream** (``sample_stream``) — anonymous monitoring/eval
+  traffic with no per-request contract: one carried PRNG key, split and
+  **donated** every dispatch (the key buffer updates in place instead of
+  being copied), full-batch ``g_apply``.
+
+Scoring programs (``score_bucket``) share the bucket ladder: the
+per-user rejection filter (``repro.serve.service``) pads its candidate
+batch the same way and scores it with a user's discriminator row.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _pad_u32(a, k: int) -> np.ndarray:
+    out = np.zeros(k, np.uint32)
+    # int64 first so negative seeds wrap instead of raising
+    out[:len(a)] = (np.asarray(a, np.int64) & 0xFFFFFFFF).astype(np.uint32)
+    return out
+
+
+class SamplerEngine:
+    """Program-cache sampler over one ``GanPair`` generator.
+
+    Programs are compiled lazily, one per (family, bucket); the caches
+    are exposed (``compile_count`` / ``program_counts``) because the
+    serve bench gates on them: compiled request programs must be bounded
+    by the bucket ladder, not by the request mix."""
+
+    def __init__(self, pair, bucket_sizes):
+        buckets = tuple(sorted(set(int(b) for b in bucket_sizes)))
+        assert buckets and all(b >= 1 for b in buckets), bucket_sizes
+        self.pair = pair
+        self.buckets = buckets
+        self.max_bucket = buckets[-1]
+        self._request_progs: dict = {}
+        self._score_progs: dict = {}
+        self._stream_progs: dict = {}
+        self._stream_key = None
+
+    # -- bucket policy -----------------------------------------------------
+
+    def bucket_for(self, k: int) -> int:
+        """Smallest bucket holding ``k`` slots (callers chunk loads
+        larger than ``max_bucket`` before asking)."""
+        assert 1 <= k <= self.max_bucket, (k, self.buckets)
+        for b in self.buckets:
+            if b >= k:
+                return b
+        raise AssertionError  # unreachable
+
+    @property
+    def compile_count(self) -> int:
+        """Compiled request-keyed programs (the bench's gated count)."""
+        return len(self._request_progs)
+
+    @property
+    def program_counts(self) -> dict:
+        return {"request": len(self._request_progs),
+                "score": len(self._score_progs),
+                "stream": len(self._stream_progs)}
+
+    # -- request-keyed sampling (the scheduler's path) ---------------------
+
+    def _request_prog(self, bucket: int):
+        if bucket not in self._request_progs:
+            pair = self.pair
+
+            def run(g_params, seeds, rids, offs, valid):
+                # slot key = fold_in(fold_in(key(seed), rid), off): the
+                # sample depends ONLY on (g_params, seed, rid, off)
+                def one(seed, rid, off, v):
+                    k = jax.random.fold_in(
+                        jax.random.fold_in(jax.random.key(seed), rid), off)
+                    z = jax.random.normal(k, (pair.z_dim,), jnp.float32)
+                    s = pair.g_apply(g_params, z[None])[0]
+                    return jnp.where(v, s, jnp.zeros_like(s))
+
+                return jax.vmap(one)(seeds, rids, offs, valid)
+
+            self._request_progs[bucket] = jax.jit(run)
+        return self._request_progs[bucket]
+
+    def sample_bucket(self, g_params, bucket: int, seeds, rids, offs,
+                      valid=None) -> jax.Array:
+        """One padded-bucket dispatch: ``seeds``/``rids``/``offs`` are
+        <= bucket slot triples (host ints or arrays); returns the
+        ``(bucket, *sample_shape)`` device array with padded rows
+        zeroed.  Callers slice off the padding."""
+        k = len(seeds)
+        if valid is None:
+            valid = np.arange(bucket) < k
+        return self._request_prog(bucket)(
+            g_params, _pad_u32(seeds, bucket), _pad_u32(rids, bucket),
+            _pad_u32(offs, bucket), np.asarray(valid, bool))
+
+    def sample_request(self, g_params, seed: int, request_id: int,
+                       n: int) -> np.ndarray:
+        """All ``n`` samples of one request, bucket-chunked — the
+        replay/verification path (bypasses any scheduler): byte-for-byte
+        what the micro-batched service returns for the same
+        ``(g_params, seed, request_id)``."""
+        out = []
+        off = 0
+        while off < n:
+            k = min(n - off, self.max_bucket)
+            b = self.bucket_for(k)
+            rows = self.sample_bucket(
+                g_params, b, [seed] * k, [request_id] * k,
+                np.arange(off, off + k))
+            out.append(np.asarray(rows)[:k])
+            off += k
+        return np.concatenate(out)
+
+    # -- discriminator scoring (rejection filter) --------------------------
+
+    def _score_prog(self, bucket: int):
+        if bucket not in self._score_progs:
+            pair = self.pair
+
+            def run(d_params, x, valid):
+                # row-wise under vmap for the same reason as the request
+                # path: a batch-coupled D (the conv pair's BatchNorm)
+                # must not let zero padding pollute valid rows' scores,
+                # and a row's score must not depend on the bucket it
+                # landed in
+                def one(row, v):
+                    s = pair.d_apply(d_params, row[None])[0]
+                    return jnp.where(v, s, -jnp.inf)
+
+                return jax.vmap(one)(x, valid)
+
+            self._score_progs[bucket] = jax.jit(run)
+        return self._score_progs[bucket]
+
+    def score_bucket(self, d_params, x: np.ndarray) -> np.ndarray:
+        """D logits for ``x`` (n, ...) through the padded bucket ladder
+        (chunked over ``max_bucket``); returns (n,) host scores (padding
+        scored -inf and sliced off)."""
+        x = np.asarray(x)
+        out = []
+        for i in range(0, x.shape[0], self.max_bucket):
+            xc = x[i:i + self.max_bucket]
+            k = xc.shape[0]
+            b = self.bucket_for(k)
+            pad = np.zeros((b - k,) + xc.shape[1:], xc.dtype)
+            xb = np.concatenate([xc, pad]) if b > k else xc
+            s = self._score_prog(b)(d_params, jnp.asarray(xb),
+                                    np.arange(b) < k)
+            out.append(np.asarray(s)[:k])
+        return np.concatenate(out)
+
+    # -- bulk stream (donated RNG carry) -----------------------------------
+
+    def _stream_prog(self, bucket: int):
+        if bucket not in self._stream_progs:
+            pair = self.pair
+
+            def run(g_params, key):
+                kz, key = jax.random.split(key)
+                return pair.g_apply(g_params, pair.sample_z(kz, bucket)), key
+
+            # the carried key is a per-dispatch throwaway: donate it so
+            # the RNG state updates in place every call
+            self._stream_progs[bucket] = jax.jit(run, donate_argnums=(1,))
+        return self._stream_progs[bucket]
+
+    def seed_stream(self, seed: int) -> None:
+        self._stream_key = jax.random.key(seed)
+
+    def sample_stream(self, g_params, n: int) -> np.ndarray:
+        """``n`` bulk samples from the carried stream key (seed it once
+        with :meth:`seed_stream`).  No per-sample contract: consecutive
+        calls continue one PRNG stream, full-batch ``g_apply``."""
+        if self._stream_key is None:
+            self.seed_stream(0)
+        out = []
+        left = n
+        while left > 0:
+            b = self.bucket_for(min(left, self.max_bucket))
+            rows, self._stream_key = self._stream_prog(b)(
+                g_params, self._stream_key)
+            out.append(np.asarray(rows)[:min(left, b)])
+            left -= min(left, b)
+        return np.concatenate(out)

@@ -1,0 +1,219 @@
+"""GenerationService: the multi-tenant serving facade over a trained
+(or still-training) Distributed-GAN federation.
+
+The paper's closing argument is that the platform ultimately *serves*
+the trained generator to "users who lack computing power" (§7); MD-GAN
+frames the server-held G as the shared artifact users consume.  This
+module turns a :class:`repro.core.session.FederationSession` — live, or
+restored from a msgpack checkpoint — into that artifact's service:
+
+* requests go through the micro-batching scheduler
+  (``repro.serve.scheduler``) into the shape-bucketed sampler engine
+  (``repro.serve.sampler``): any request mix runs through O(log
+  max_batch) compiled programs;
+* **hot-swap**: ``refresh()`` atomically publishes the session's
+  current generator between batches — a training loop can interleave
+  ``session.run(k); service.refresh()`` and in-flight dispatches never
+  see a half-written tree (the publish is a single reference swap under
+  the dispatch lock);
+* **determinism**: request ``r``'s samples are a pure function of
+  ``(published generator, seed, r)`` — replayable via
+  :meth:`replay`, independent of batch-mates (pinned across processes
+  in tests/test_serve.py);
+* **accounting**: per-user requests / samples / bytes served, in the
+  same spirit as the training side's upload-byte accounting;
+* **approach-aware filtering**: for approaches that keep per-user
+  discriminator rows in the store (``ApproachDef.user_axis``),
+  :meth:`sample_filtered` draws ``oversample * n`` candidates and keeps
+  the ``n`` the *user's own* D scores highest — personalized rejection
+  sampling against the tenant's local data manifold.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.approaches import d_flat_layout
+from repro.core.session import FederationSession
+from repro.core.spec import ServeSpec, resolve_approach
+from repro.serve.sampler import SamplerEngine
+from repro.serve.scheduler import MicroBatcher, SampleRequest
+
+
+class GenerationService:
+    """Bucketed, micro-batched, hot-swappable sample service.
+
+    Build one with :meth:`from_session` (live training state) or
+    :meth:`from_checkpoint` (a ``FederationSession.save`` directory in a
+    fresh process).  ``serve`` defaults to the session spec's ``serve``
+    block, then to ``ServeSpec()``."""
+
+    def __init__(self, pair, g_params, *, serve: ServeSpec | None = None,
+                 session: FederationSession | None = None):
+        self.pair = pair
+        self.serve = serve or ServeSpec()
+        self.session = session
+        self.engine = SamplerEngine(pair, self.serve.buckets())
+        self.batcher = MicroBatcher(self._dispatch, self.serve.buckets(),
+                                    self.serve.flush_ms / 1e3)
+        self._g = g_params
+        self._publish_lock = threading.Lock()
+        self._accounting_lock = threading.Lock()
+        self.generation = 0        # bumped by every refresh()
+        self._per_user: dict = collections.defaultdict(
+            lambda: {"requests": 0, "samples": 0, "bytes": 0})
+        self._d_layout = d_flat_layout(pair)
+
+    # -- constructors ------------------------------------------------------
+
+    @classmethod
+    def from_session(cls, session: FederationSession, *,
+                     serve: ServeSpec | None = None) -> "GenerationService":
+        """Serve a live session's current generator (call
+        :meth:`refresh` after later ``session.run`` windows)."""
+        return cls(session.pair, session.generator_params(),
+                   serve=serve or session.spec.serve, session=session)
+
+    @classmethod
+    def from_checkpoint(cls, path: str, pair, fcfg, *, mesh=None,
+                        serve: ServeSpec | None = None
+                        ) -> "GenerationService":
+        """Restore a ``FederationSession.save(path)`` checkpoint and
+        serve it.  No dataset is bound — the restored session backs
+        serving (generator + per-user D rows) only; rebuild it through
+        ``FederationSession.restore`` with a dataset to keep training."""
+        session = FederationSession.restore(path, pair, fcfg, None,
+                                            mesh=mesh)
+        return cls.from_session(session, serve=serve)
+
+    # -- hot swap ----------------------------------------------------------
+
+    def refresh(self, session: FederationSession | None = None) -> int:
+        """Atomically publish the (possibly newer) generator from
+        ``session`` (default: the bound one).  Dispatches already in
+        flight finish on the old tree; every later batch sees the new
+        one.  Returns the new generation counter."""
+        sess = session or self.session
+        if sess is None:
+            raise ValueError("no session bound and none passed")
+        g = sess.generator_params()
+        with self._publish_lock:
+            self._g = g
+            self.generation += 1
+            return self.generation
+
+    # -- request path ------------------------------------------------------
+
+    def _dispatch(self, bucket: int, seeds, rids, offs) -> np.ndarray:
+        with self._publish_lock:
+            g = self._g            # the atomic publish point
+        return np.asarray(
+            self.engine.sample_bucket(g, bucket, seeds, rids, offs))
+
+    def submit(self, user_id: int, n: int, seed: int = 0, cond=None, *,
+               request_id: int | None = None):
+        """Enqueue a request; returns its future.  Drive the batcher
+        with :meth:`drain` (sync) or ``service.batcher.start()``
+        (background pump)."""
+        req = SampleRequest(user_id=int(user_id), n=int(n), seed=int(seed),
+                            cond=cond)
+        fut = self.batcher.submit(req, request_id=request_id)
+        with self._accounting_lock:
+            self._per_user[req.user_id]["requests"] += 1
+
+        def account(f):
+            if f.cancelled() or f.exception() is not None:
+                return
+            arr = f.result()
+            with self._accounting_lock:
+                acc = self._per_user[req.user_id]
+                acc["samples"] += len(arr)
+                acc["bytes"] += arr.nbytes
+
+        fut.add_done_callback(account)
+        return fut
+
+    def drain(self) -> None:
+        self.batcher.drain()
+
+    def sample(self, user_id: int, n: int, seed: int = 0, *,
+               request_id: int | None = None) -> np.ndarray:
+        """Synchronous convenience: submit + drain + result."""
+        fut = self.submit(user_id, n, seed, request_id=request_id)
+        if not fut.done():
+            self.drain()
+        return fut.result()
+
+    def replay(self, seed: int, request_id: int, n: int) -> np.ndarray:
+        """Re-materialize request ``request_id``'s samples from its RNG
+        identity alone — byte-identical to what was served (for the
+        same published generator), no queue involved."""
+        with self._publish_lock:
+            g = self._g
+        return self.engine.sample_request(g, seed, request_id, n)
+
+    # -- per-user discriminator rejection filter ---------------------------
+
+    def user_d_params(self, user_id: int):
+        """The tenant's own discriminator tree, gathered from the bound
+        session's store (host / device / spmd backends all answer)."""
+        if self.session is None:
+            raise ValueError("rejection filtering needs a bound session "
+                             "(the per-user D rows live in its store)")
+        return self._d_layout.unflatten(
+            jnp.asarray(self.session.user_d_flat(user_id)))
+
+    def sample_filtered(self, user_id: int, n: int, seed: int = 0, *,
+                        request_id: int | None = None,
+                        oversample: int | None = None) -> np.ndarray:
+        """``n`` samples rejection-filtered by the USER'S discriminator:
+        draw ``oversample * n`` candidates under the request's RNG
+        identity, score them with the tenant's own D row, keep the
+        top-``n`` (stable order, so the result is as deterministic as
+        the plain path).  Only approaches that keep per-user D rows
+        support this (``ApproachDef.user_axis``); the session accessor
+        raises otherwise."""
+        if self.session is not None and \
+                not resolve_approach(self.session.spec.approach).user_axis:
+            raise ValueError(
+                f"approach {self.session.spec.approach!r} keeps no "
+                f"per-user discriminator rows to filter with")
+        d_params = self.user_d_params(user_id)
+        k = oversample or self.serve.oversample
+        if request_id is None:
+            # shared counter: filtered and plain requests never collide
+            # on an RNG identity
+            request_id = self.batcher.reserve_request_id()
+        m = k * n
+        with self._publish_lock:
+            g = self._g
+        cands = self.engine.sample_request(g, seed, request_id, m)
+        scores = self.engine.score_bucket(d_params, cands)
+        keep = np.argsort(-scores, kind="stable")[:n]
+        out = cands[np.sort(keep)]
+        with self._accounting_lock:
+            acc = self._per_user[int(user_id)]
+            acc["requests"] += 1
+            acc["samples"] += n
+            acc["bytes"] += out.nbytes
+        return out
+
+    # -- accounting --------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Service-wide counters: per-user accounting, program-cache
+        sizes, and the batcher's coalescing stats."""
+        with self._accounting_lock:
+            per_user = {u: dict(v) for u, v in self._per_user.items()}
+        return {
+            "per_user": per_user,
+            "total_samples": sum(v["samples"] for v in per_user.values()),
+            "total_bytes": sum(v["bytes"] for v in per_user.values()),
+            "generation": self.generation,
+            "programs": self.engine.program_counts,
+            "batcher": dict(self.batcher.stats),
+        }

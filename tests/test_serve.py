@@ -1,0 +1,398 @@
+"""Serving subsystem tests (the PR 5 tentpole): bucket ladder policy and
+bounded program compilation, per-request RNG isolation (bytes invariant
+to batch-mates / bucket / chunking), micro-batcher coalescing and
+splitting, size-or-deadline flush policy, hot-swap publication,
+per-user accounting, the per-user discriminator rejection filter, and
+the checkpoint -> fresh-process serve determinism contract."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core.approaches import DistGANConfig
+from repro.core.gan import (ConvGanConfig, MLPGanConfig, make_conv_pair,
+                            make_mlp_pair)
+from repro.core.session import FederationSession
+from repro.core.spec import (BackendSpec, FederationSpec,
+                             ParticipationSpec, ServeSpec)
+from repro.data.federated import FederatedDataset
+from repro.data.mixtures import make_user_domains
+from repro.serve import GenerationService, MicroBatcher, SampleRequest
+from repro.serve.sampler import SamplerEngine
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                  d_hidden=32))
+
+
+def _ds(num_users):
+    users, union = make_user_domains(num_users, 2, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample,
+                            {"shard_sizes": [100] * num_users})
+
+
+def _session(backend="host", U=4, C=2, rounds=3, approach="approach1",
+             serve=None):
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    part = (ParticipationSpec("uniform", cohort_size=C) if C is not None
+            else ParticipationSpec())    # full participation (baseline)
+    spec = FederationSpec(
+        approach=approach, batch_size=8, eval_samples=0,
+        participation=part,
+        backend=BackendSpec(backend),
+        serve=serve or ServeSpec(max_batch=16, flush_ms=1.0))
+    sess = FederationSession(PAIR, fcfg, _ds(U), spec)
+    sess.run(rounds)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# sampler engine: bucket ladder + per-request isolation
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_policy():
+    eng = SamplerEngine(PAIR, ServeSpec(max_batch=16).buckets())
+    assert eng.buckets == (1, 2, 4, 8, 16)
+    assert [eng.bucket_for(k) for k in (1, 2, 3, 5, 9, 16)] == \
+        [1, 2, 4, 8, 16, 16]
+    with pytest.raises(AssertionError):
+        eng.bucket_for(17)   # callers chunk loads beyond max_bucket
+
+
+def test_samples_bitwise_invariant_to_batch_mates_and_chunking():
+    """The serving determinism contract: slot (seed, rid, off) produces
+    the same bytes alone, packed with unrelated batch-mates in a bigger
+    bucket, and chunked across dispatches."""
+    g, _ = PAIR.init(jax.random.key(0))
+    eng = SamplerEngine(PAIR, (1, 2, 4, 8, 16))
+    alone = eng.sample_request(g, seed=7, request_id=3, n=5)
+    seeds = [7] * 5 + [99] * 7
+    rids = [3] * 5 + [42] * 7
+    offs = list(range(5)) + list(range(7))
+    mixed = np.asarray(eng.sample_bucket(g, 16, seeds, rids, offs))[:5]
+    np.testing.assert_array_equal(alone, mixed)
+    # chunked across buckets (n > max_bucket) — same leading bytes
+    big = eng.sample_request(g, seed=7, request_id=3, n=21)
+    np.testing.assert_array_equal(big[:5], alone)
+
+
+def test_conv_pair_batchnorm_cannot_couple_batch_mates():
+    """The conv generator's BatchNorm normalizes over the batch; the
+    row-wise vmap application makes each slot its own batch of one, so
+    even this pair serves batch-composition-independent bytes."""
+    pair = make_conv_pair(ConvGanConfig(image_size=16, channels=1, z_dim=8,
+                                        base_filters=4))
+    g, _ = pair.init(jax.random.key(1))
+    eng = SamplerEngine(pair, (1, 2, 4, 8))
+    alone = eng.sample_request(g, seed=1, request_id=0, n=3)
+    mixed = np.asarray(eng.sample_bucket(
+        g, 8, [1] * 3 + [5] * 4, [0] * 3 + [9] * 4,
+        [0, 1, 2, 0, 1, 2, 3]))[:3]
+    np.testing.assert_array_equal(alone, mixed)
+
+
+def test_compile_count_bounded_by_buckets_not_request_mix():
+    g, _ = PAIR.init(jax.random.key(0))
+    buckets = ServeSpec(max_batch=16).buckets()
+    eng = SamplerEngine(PAIR, buckets)
+    for n in range(1, 17):            # 16 distinct request sizes
+        eng.sample_request(g, seed=0, request_id=n, n=n)
+    assert eng.compile_count <= len(buckets)
+    assert eng.compile_count == 5     # every rung touched exactly once
+
+
+def test_stream_path_reproducible_from_seed():
+    g, _ = PAIR.init(jax.random.key(0))
+    eng = SamplerEngine(PAIR, (4, 8))
+    eng.seed_stream(3)
+    a = eng.sample_stream(g, 10)
+    eng.seed_stream(3)
+    b = eng.sample_stream(g, 10)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (10, 2)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher: coalescing, splitting, size-or-deadline flush
+# ---------------------------------------------------------------------------
+
+def _recording_dispatch(log):
+    def dispatch(bucket, seeds, rids, offs):
+        log.append((bucket, len(seeds)))
+        return np.stack([np.asarray([s, r, o], np.float32)
+                         for s, r, o in zip(seeds, rids, offs)])
+    return dispatch
+
+
+def test_batcher_coalesces_requests_into_one_bucket():
+    log = []
+    b = MicroBatcher(_recording_dispatch(log), (1, 2, 4, 8, 16), 1.0)
+    futs = [b.submit(SampleRequest(user_id=u, n=n, seed=u))
+            for u, n in [(0, 3), (1, 5), (2, 2)]]
+    assert b.pending_slots() == 10
+    b.drain()
+    assert log == [(16, 10)]          # ONE dispatch, largest fitting bucket
+    for (u, n), f in zip([(0, 3), (1, 5), (2, 2)], futs):
+        out = f.result(timeout=1)
+        assert out.shape[0] == n
+        # every slot carries its own (seed, rid, off) identity
+        np.testing.assert_array_equal(out[:, 2], np.arange(n))
+        assert set(out[:, 0]) == {u}
+    assert b.stats["flushes"] == 1 and b.stats["padded_slots"] == 6
+
+
+def test_batcher_splits_oversized_request_across_dispatches():
+    log = []
+    b = MicroBatcher(_recording_dispatch(log), (4, 8), 1.0)
+    f = b.submit(SampleRequest(user_id=0, n=19, seed=5))
+    b.drain()
+    assert log == [(8, 8), (8, 8), (4, 3)]
+    out = f.result(timeout=1)
+    np.testing.assert_array_equal(out[:, 2], np.arange(19))  # offs global
+
+
+def test_batcher_size_or_deadline_due():
+    now = [0.0]
+    log = []
+    b = MicroBatcher(_recording_dispatch(log), (1, 2, 4), 0.010,
+                     clock=lambda: now[0])
+    assert not b.due()                # empty
+    b.submit(SampleRequest(user_id=0, n=2))
+    assert not b.due()                # under size, under deadline
+    b.submit(SampleRequest(user_id=1, n=2))
+    assert b.due()                    # 4 slots = a full max bucket
+    b.flush()
+    b.submit(SampleRequest(user_id=2, n=1))
+    assert not b.due()
+    now[0] += 0.011
+    assert b.due()                    # deadline expired
+    b.drain()
+    assert log == [(4, 4), (1, 1)]
+
+
+def test_batcher_dispatch_failure_fails_the_futures():
+    def boom(bucket, seeds, rids, offs):
+        raise RuntimeError("device fell over")
+    b = MicroBatcher(boom, (4,), 1.0)
+    f = b.submit(SampleRequest(user_id=0, n=2))
+    with pytest.raises(RuntimeError, match="fell over"):
+        b.flush()
+    with pytest.raises(RuntimeError, match="fell over"):
+        f.result(timeout=1)
+
+
+def test_batcher_recovers_after_mid_request_dispatch_failure():
+    """A dispatch that dies mid-way through a SPLIT request fails that
+    request's future once; the dead slots are swept and later traffic
+    is served normally."""
+    calls = {"n": 0}
+
+    def flaky(bucket, seeds, rids, offs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return np.stack([np.asarray([s, r, o], np.float32)
+                         for s, r, o in zip(seeds, rids, offs)])
+
+    b = MicroBatcher(flaky, (4,), 1.0)
+    f_split = b.submit(SampleRequest(user_id=0, n=6))   # spans 2 buckets
+    with pytest.raises(RuntimeError, match="transient"):
+        b.drain()
+    with pytest.raises(RuntimeError, match="transient"):
+        f_split.result(timeout=1)
+    f_next = b.submit(SampleRequest(user_id=1, n=3))
+    b.drain()       # sweeps the failed request's leftover slots
+    assert f_next.result(timeout=1).shape[0] == 3
+
+
+def test_conv_d_scores_invariant_to_bucket_padding():
+    """Scoring is row-wise under vmap for the same reason sampling is:
+    a BatchNorm discriminator's statistics must not see the bucket's
+    zero padding, and a row's score must not depend on which ladder
+    rung (or chunk) it landed in."""
+    pair = make_conv_pair(ConvGanConfig(image_size=16, channels=1, z_dim=8,
+                                        base_filters=4))
+    g, d = pair.init(jax.random.key(2))
+    x = np.asarray(SamplerEngine(pair, (8,)).sample_request(g, 0, 0, 5))
+    wide = SamplerEngine(pair, (1, 2, 4, 8, 16)).score_bucket(d, x)  # pad 11
+    snug = SamplerEngine(pair, (5,)).score_bucket(d, x)              # pad 0
+    chunked = SamplerEngine(pair, (3,)).score_bucket(d, x)           # 3 + 2
+    np.testing.assert_array_equal(wide, snug)
+    np.testing.assert_array_equal(wide, chunked)
+
+
+def test_pump_survives_transient_dispatch_failure():
+    """A dispatch error in pump mode fails the owning futures but must
+    NOT kill the pump thread — later requests still get served."""
+    calls = {"n": 0}
+
+    def flaky(bucket, seeds, rids, offs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient")
+        return np.zeros((bucket, 2), np.float32)
+
+    b = MicroBatcher(flaky, (4,), 0.001)
+    b.start()
+    try:
+        f1 = b.submit(SampleRequest(user_id=0, n=2))
+        with pytest.raises(RuntimeError, match="transient"):
+            f1.result(timeout=5)
+        f2 = b.submit(SampleRequest(user_id=1, n=3))
+        assert f2.result(timeout=5).shape[0] == 3
+    finally:
+        b.stop()
+
+
+def test_batcher_background_pump_serves():
+    g, _ = PAIR.init(jax.random.key(0))
+    eng = SamplerEngine(PAIR, (1, 2, 4, 8))
+
+    def dispatch(bucket, seeds, rids, offs):
+        return np.asarray(eng.sample_bucket(g, bucket, seeds, rids, offs))
+
+    b = MicroBatcher(dispatch, (1, 2, 4, 8), 0.001)
+    b.start()
+    try:
+        futs = [b.submit(SampleRequest(user_id=0, n=n, seed=9))
+                for n in (3, 5, 2)]
+        outs = [f.result(timeout=5) for f in futs]
+    finally:
+        b.stop()
+    assert [o.shape[0] for o in outs] == [3, 5, 2]
+    # pump-served bytes == the engine's solo replay (rids 0, 1, 2)
+    np.testing.assert_array_equal(outs[1],
+                                  eng.sample_request(g, 9, 1, 5))
+
+
+# ---------------------------------------------------------------------------
+# GenerationService: determinism, hot-swap, accounting, filtering
+# ---------------------------------------------------------------------------
+
+def test_service_served_bytes_equal_replay():
+    sess = _session()
+    svc = GenerationService.from_session(sess)
+    futs = [svc.submit(u, n, seed=u * 11) for u, n in
+            [(0, 3), (1, 6), (2, 2), (3, 9)]]
+    svc.drain()
+    for rid, ((u, n), f) in enumerate(zip([(0, 3), (1, 6), (2, 2), (3, 9)],
+                                          futs)):
+        np.testing.assert_array_equal(f.result(timeout=1),
+                                      svc.replay(u * 11, rid, n))
+
+
+def test_service_hot_swap_publishes_between_batches():
+    sess = _session()
+    svc = GenerationService.from_session(sess)
+    before = svc.sample(0, 4, seed=1, request_id=100)
+    sess.run(2)
+    assert svc.generation == 0
+    # un-refreshed service still serves the OLD generator
+    np.testing.assert_array_equal(svc.replay(1, 100, 4), before)
+    assert svc.refresh() == 1
+    after = svc.replay(1, 100, 4)
+    assert not np.array_equal(before, after)
+    # the refreshed artifact is exactly the session's current generator
+    direct = SamplerEngine(PAIR, svc.serve.buckets()).sample_request(
+        sess.generator_params(), 1, 100, 4)
+    np.testing.assert_array_equal(after, direct)
+
+
+def test_service_per_user_accounting():
+    sess = _session()
+    svc = GenerationService.from_session(sess)
+    svc.sample(0, 5, seed=1)
+    svc.sample(0, 3, seed=2)
+    svc.sample(2, 4, seed=3)
+    st = svc.stats()
+    assert st["per_user"][0] == {"requests": 2, "samples": 8,
+                                 "bytes": 8 * 2 * 4}
+    assert st["per_user"][2]["samples"] == 4
+    assert st["total_samples"] == 12
+    assert st["programs"]["request"] <= len(svc.serve.buckets())
+
+
+@pytest.mark.parametrize("backend", ["device", "host"])
+def test_rejection_filter_prefers_own_d_scores(backend):
+    """sample_filtered keeps the oversampled candidates the USER'S OWN
+    discriminator row scores highest — mean own-D score must beat the
+    unfiltered draw's, on both store residencies."""
+    sess = _session(backend=backend, rounds=4)
+    svc = GenerationService.from_session(sess)
+    plain = svc.sample(1, 16, seed=5, request_id=500)
+    filt = svc.sample_filtered(1, 16, seed=5, request_id=501)
+    d1 = svc.user_d_params(1)
+    assert svc.engine.score_bucket(d1, filt).mean() >= \
+        svc.engine.score_bucket(d1, plain).mean()
+    # deterministic: same RNG identity -> same filtered bytes
+    np.testing.assert_array_equal(
+        filt, svc.sample_filtered(1, 16, seed=5, request_id=501))
+
+
+def test_rejection_filter_rejected_without_user_rows():
+    sess = _session(approach="baseline", U=2, C=None, backend="device")
+    svc = GenerationService.from_session(sess)
+    with pytest.raises(ValueError, match="no user axis|no per-user"):
+        svc.sample_filtered(0, 4)
+
+
+def test_user_d_flat_matches_store_row():
+    sess = _session(backend="host", rounds=3)
+    svc = GenerationService.from_session(sess)
+    hb = sess._driver.backend
+    np.testing.assert_array_equal(sess.user_d_flat(2), hb.d_flat[2])
+    # the unflattened tree scores like the raw row promises
+    d = svc.user_d_params(2)
+    assert len(jax.tree.leaves(d)) == 6
+
+
+# ---------------------------------------------------------------------------
+# checkpoint -> serve determinism (satellite): save in this process,
+# serve from a fresh one, pinned bytes across batch-mate mixes
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_serve_fresh_process_determinism(tmp_path):
+    sess = _session(rounds=4)
+    svc = GenerationService.from_session(sess)
+    # serve request (seed=11, rid=7) n=6 PACKED with unrelated traffic
+    futs = [svc.submit(u, n, seed=s, request_id=r)
+            for u, n, s, r in [(0, 4, 3, 5), (1, 6, 11, 7), (2, 5, 9, 8)]]
+    svc.drain()
+    want = futs[1].result(timeout=1)
+    np.save(tmp_path / "want.npy", want)
+    sess.save(str(tmp_path / "ckpt"))
+
+    code = textwrap.dedent(f"""
+        import numpy as np, jax
+        from repro.core.approaches import DistGANConfig
+        from repro.core.gan import MLPGanConfig, make_mlp_pair
+        from repro.serve import GenerationService
+
+        pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                          d_hidden=32))
+        fcfg = DistGANConfig(num_users=4, selection="topk", upload_frac=0.3)
+        svc = GenerationService.from_checkpoint(
+            r"{tmp_path}/ckpt", pair, fcfg)
+        # serve spec round-tripped through the manifest
+        assert svc.serve.max_batch == 16, svc.serve
+        want = np.load(r"{tmp_path}/want.npy")
+        # (a) solo replay from the RNG identity alone
+        np.testing.assert_array_equal(svc.replay(11, 7, 6), want)
+        # (b) served again under a DIFFERENT batch-mate mix
+        futs = [svc.submit(u, n, seed=s, request_id=r)
+                for u, n, s, r in [(3, 2, 8, 60), (1, 6, 11, 7),
+                                   (0, 9, 1, 61), (2, 1, 4, 62)]]
+        svc.drain()
+        np.testing.assert_array_equal(futs[1].result(timeout=1), want)
+        print("SERVE DETERMINISM OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SERVE DETERMINISM OK" in r.stdout

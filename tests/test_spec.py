@@ -21,7 +21,7 @@ from repro.core.gan import MLPGanConfig, make_mlp_pair
 from repro.core.protocol import run_distgan
 from repro.core.session import FederationSession
 from repro.core.spec import (BackendSpec, CombineSpec, EngineSpec,
-                             FederationSpec, ParticipationSpec,
+                             FederationSpec, ParticipationSpec, ServeSpec,
                              register_combiner, register_scheduler,
                              resolve_approach)
 from repro.data.federated import FederatedDataset
@@ -189,6 +189,38 @@ def test_spec_dict_json_roundtrip():
     bad["backend"]["kind"] = "no_such_backend"
     with pytest.raises(KeyError, match="unknown backend"):
         FederationSpec.from_dict(bad)
+
+
+def test_serve_spec_block_roundtrip_and_validation():
+    """The optional ``serve`` manifest section: power-of-two ladder
+    derivation, explicit bucket ladders (JSON lists normalize to
+    tuples), dict/JSON round-trips, and the clear unknown-key error."""
+    assert ServeSpec().buckets() == (1, 2, 4, 8, 16, 32, 64)
+    spec = FederationSpec(
+        approach="approach1",
+        serve=ServeSpec(bucket_sizes=[2, 6, 24], flush_ms=0.5))
+    via_json = FederationSpec.from_json(spec.to_json())
+    assert via_json == spec
+    assert via_json.serve.bucket_sizes == (2, 6, 24)
+    assert via_json.serve.max_batch == 24
+    assert via_json.serve.buckets() == (2, 6, 24)
+    # absent block stays absent through the round-trip
+    plain = FederationSpec(approach="approach1")
+    assert FederationSpec.from_dict(plain.to_dict()).serve is None
+    # a typo'd manifest key is an error that NAMES the key, not a
+    # silent fall-through to the default
+    bad = spec.to_dict()
+    bad["serve"]["flsh_ms"] = bad["serve"].pop("flush_ms")
+    with pytest.raises(ValueError, match=r"unknown key.*flsh_ms.*serve"):
+        FederationSpec.from_dict(bad)
+    with pytest.raises(ValueError, match="power of two"):
+        ServeSpec(max_batch=48)
+    with pytest.raises(ValueError, match="bucket_sizes"):
+        ServeSpec(bucket_sizes=(4, 2))
+    with pytest.raises(ValueError, match="flush_ms"):
+        ServeSpec(flush_ms=-1.0)
+    with pytest.raises(ValueError, match="oversample"):
+        ServeSpec(oversample=0)
 
 
 # ---------------------------------------------------------------------------
@@ -421,6 +453,67 @@ def test_session_resume_matches_uninterrupted(backend, tmp_path):
     # final staleness agrees (host store / last_round round-tripped)
     np.testing.assert_array_equal(w2.extra["staleness"],
                                   full.extra["staleness"])
+
+
+def test_autosave_killed_run_resumes_from_last_autosave(tmp_path):
+    """``run(rounds, autosave_every=N, autosave_path=...)`` checkpoints
+    at internal round boundaries: a run killed mid-way restores from the
+    LAST autosave and — windowing being trajectory-neutral on the sync
+    device backend — reproduces the uninterrupted trajectory bitwise
+    from that round on.  Also pins that autosave itself is neutral: an
+    un-killed autosaving run equals the plain one."""
+    U, C = 4, 2
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    spec = FederationSpec(
+        approach="approach1", batch_size=8, seed=0, eval_samples=0,
+        engine=EngineSpec(rounds_per_jit=4),
+        participation=ParticipationSpec("uniform", cohort_size=C))
+
+    full = FederationSession(PAIR, fcfg, _ds(U), spec).run(10)
+
+    # un-killed autosaving run: bitwise the plain trajectory, checkpoint
+    # left at the final round
+    path_ok = str(tmp_path / "ok")
+    s_ok = FederationSession(PAIR, fcfg, _ds(U), spec)
+    r_ok = s_ok.run(10, autosave_every=3, autosave_path=path_ok)
+    np.testing.assert_array_equal(r_ok.g_losses, full.g_losses)
+    np.testing.assert_array_equal(r_ok.extra["schedule"],
+                                  full.extra["schedule"])
+    assert FederationSession.restore(path_ok, PAIR, fcfg,
+                                     _ds(U)).round == 10
+
+    # killed run: the data source dies mid-window-3 (rounds 6-8); the
+    # samplers return the SAME stream as _ds(U) until then, so the
+    # autosaves at rounds 3 and 6 hold the uninterrupted trajectory
+    healthy = _ds(U)
+    calls = {"n": 0}
+
+    def flaky_user(u):
+        def sample(rng, n):
+            calls["n"] += 1
+            if calls["n"] > 16:      # probe(2) + 3 windows x 6 = 20
+                raise ConnectionError("data source died")
+            return healthy.samplers[u](rng, n)
+        return sample
+
+    flaky_ds = FederatedDataset([flaky_user(u) for u in range(U)],
+                                healthy.union_sampler,
+                                {"shard_sizes": [100 * (u + 1)
+                                                 for u in range(U)]})
+    path = str(tmp_path / "killed")
+    s_kill = FederationSession(PAIR, fcfg, flaky_ds, spec)
+    with pytest.raises(ConnectionError):
+        s_kill.run(10, autosave_every=3, autosave_path=path)
+    with pytest.raises(RuntimeError, match="mid-window"):
+        s_kill.save(str(tmp_path / "bad"))   # the dead session is toast
+
+    restored = FederationSession.restore(path, PAIR, fcfg, _ds(U))
+    assert restored.round == 6               # the last autosave boundary
+    got = restored.run(4)
+    np.testing.assert_array_equal(got.g_losses, full.g_losses[6:])
+    np.testing.assert_array_equal(got.d_losses, full.d_losses[6:])
+    np.testing.assert_array_equal(got.extra["schedule"],
+                                  full.extra["schedule"][6:])
 
 
 def test_save_refuses_after_mid_window_failure(tmp_path):

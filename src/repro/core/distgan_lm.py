@@ -98,6 +98,25 @@ def make_lm_pair(cfg: LMGanConfig) -> GanPair:
                    lambda p, z: _gen_apply(p, z, cfg), d_apply, cfg.z_dim)
 
 
+def critic_lm_config(cfg: LMGanConfig):
+    """The critic backbone as a servable LM ``ModelConfig``.  The critic
+    owns an embedding matrix but no unembed, so the served LM ties its
+    logits to the embedding (``tie_embeddings=True``) — exactly the tree
+    :func:`critic_lm_params` exports."""
+    return dataclasses.replace(cfg.backbone, tie_embeddings=True)
+
+
+def critic_lm_params(critic_params):
+    """Export a federation-trained critic's backbone as LM params: drop
+    the realness ``head`` and what remains (embed + layer stack +
+    final_norm) is a complete parameter tree for
+    ``models.model.decode_step`` under :func:`critic_lm_config` — the
+    bridge that lets the continuous-batching decode engine
+    (``repro.serve.decode``) serve a backbone straight out of a
+    Distributed-GAN session."""
+    return {k: v for k, v in critic_params.items() if k != "head"}
+
+
 def user_token_stream(vocab: int, seq: int, *, a: int, c: int,
                       strength: float = 0.9):
     """A user's private domain: tokens following x_{t+1} = a*x_t + c mod V

@@ -175,12 +175,16 @@ def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
 # round, so U is bounded by host RAM.  Both expose the same contract:
 #
 #   gather_rows(idx)  -> (d_rows (C, Nd), opt_rows (C, No),
-#                         last_round (C,) np.int32)
+#                         last_round (C,) i32 — host or device array)
 #   scatter_rows(idx, d_rows, opt_rows, round_idx) -> None  (mutates)
 #   snapshot()        -> CohortStore (device-resident, for eval/interop)
 #
-# ``last_round`` comes back as host ints because the drivers compute ages
-# host-side before dispatch.  Scatter is last-writer-wins: under the
+# ``last_round`` comes back as host ints from the host backend (the
+# drivers compute ages host-side there); a ``device_resident`` backend
+# may instead hand back device arrays for ALL THREE returns, and the
+# streaming driver then computes ages on device and scatters device
+# arrays straight back — no host sync anywhere on the round path.
+# Scatter is last-writer-wins: under the
 # async bounded-staleness driver (core.session.stream_cohort_rounds) a
 # round's scatter may land AFTER later rounds launched — the classic
 # async parameter-server semantics, with staleness bounded by the
@@ -190,6 +194,12 @@ class UserStateBackend:
     """Abstract residency contract for per-user D/optimizer rows."""
 
     num_users: int
+
+    # True when gather_rows/scatter_rows exchange device-resident arrays:
+    # the streaming driver then keeps the whole round path on device
+    # (device-side ages, no D2H fetch before scatter) and only blocks the
+    # host on the metrics fetch.
+    device_resident: bool = False
 
     def gather_rows(self, idx):
         raise NotImplementedError
@@ -207,6 +217,8 @@ class DeviceStateBackend(UserStateBackend):
     carry instead (faster — no per-round host round-trip); this wrapper
     exists so the streaming driver can run against either residency."""
 
+    device_resident = True
+
     def __init__(self, store: CohortStore):
         self.store = store
 
@@ -216,10 +228,11 @@ class DeviceStateBackend(UserStateBackend):
 
     def gather_rows(self, idx):
         idx = jnp.asarray(idx)
-        # index on DEVICE first: only the C gathered entries cross to the
-        # host, keeping per-round cost independent of U
+        # everything stays on DEVICE — including last_round, so the
+        # streaming driver's age computation doesn't force a blocking
+        # host sync on the store every round
         return (self.store.d_flat[idx], self.store.opt_flat[idx],
-                np.asarray(self.store.last_round[idx]))
+                self.store.last_round[idx])
 
     def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
         idx = jnp.asarray(idx)
@@ -274,9 +287,12 @@ class HostStateBackend(UserStateBackend):
         self.last_round[idx] = np.int32(round_idx)
 
     def snapshot(self) -> CohortStore:
-        return CohortStore(jnp.asarray(self.d_flat),
-                           jnp.asarray(self.opt_flat),
-                           jnp.asarray(self.last_round))
+        # jnp.asarray may zero-copy a large aligned host buffer on the
+        # CPU backend — a snapshot aliasing the live store would then be
+        # silently corrupted by later in-place scatters.  Force copies.
+        return CohortStore(jnp.array(self.d_flat),
+                           jnp.array(self.opt_flat),
+                           jnp.array(self.last_round))
 
 
 # ---------------------------------------------------------------------------

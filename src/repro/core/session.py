@@ -255,7 +255,15 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
 
     def stage_rows(r):
         d_rows, o_rows, last = backend.gather_rows(schedule[r])
-        ages = np.asarray(round_base + r - np.asarray(last), np.int32)
+        if isinstance(last, jax.Array):
+            # device-resident last_round: compute ages on device too —
+            # int32 subtraction is bitwise the same either side of the
+            # boundary, and staying on device avoids a blocking sync on
+            # the store every round
+            ages = (jnp.int32(round_base + r) - last).astype(jnp.int32)
+        else:
+            ages = jax.device_put(
+                np.asarray(round_base + r - np.asarray(last), np.int32))
 
         def put(a):
             # DeviceStateBackend hands back device-resident rows — pass
@@ -265,7 +273,7 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
                 return a
             return jax.device_put(np.ascontiguousarray(a))
 
-        return put(d_rows), put(o_rows), jax.device_put(ages)
+        return put(d_rows), put(o_rows), ages
 
     def stage_data(r):
         return jax.device_put(np.asarray(batch_fn(r)))
@@ -274,10 +282,18 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
         while len(inflight) > keep:
             rr, ii, nd, no, m = inflight.popleft()
             t0 = time.perf_counter()
-            nd, no = np.asarray(nd), np.asarray(no)  # blocks on round rr
-            stats.stall_s[rr] = time.perf_counter() - t0
-            backend.scatter_rows(ii, nd, no, round_base + rr + 1)
-            metrics_out[rr] = jax.tree.map(np.asarray, m)
+            if getattr(backend, "device_resident", False):
+                # device-resident store: the updated rows never leave the
+                # device — scatter is a functional .at[].set on device
+                # arrays, and the only host block is the metrics fetch
+                backend.scatter_rows(ii, nd, no, round_base + rr + 1)
+                metrics_out[rr] = jax.tree.map(np.asarray, m)
+                stats.stall_s[rr] = time.perf_counter() - t0
+            else:
+                nd, no = np.asarray(nd), np.asarray(no)  # blocks on rr
+                stats.stall_s[rr] = time.perf_counter() - t0
+                backend.scatter_rows(ii, nd, no, round_base + rr + 1)
+                metrics_out[rr] = jax.tree.map(np.asarray, m)
             stats.retire_t[rr] = time.perf_counter()
 
     rows = stage_rows(0)

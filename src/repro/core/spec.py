@@ -314,12 +314,21 @@ class ServeSpec:
                       dispatched once its oldest request has waited this
                       long (milliseconds);
     ``oversample``  — candidate factor for the per-user discriminator-
-                      scored rejection filter (k*n candidates keep n)."""
+                      scored rejection filter (k*n candidates keep n);
+    ``rate_limit``  — per-tenant admission control: at most this many
+                      requests (sample AND decode, they share the
+                      window) per ``rate_window_s`` sliding window;
+                      ``None`` disables it.  Over-limit submissions
+                      raise ``repro.serve.service.RateLimitExceeded``
+                      and count in the tenant's ``rejected`` accounting
+                      row."""
 
     max_batch: int = 64
     bucket_sizes: tuple | None = None
     flush_ms: float = 2.0
     oversample: int = 4
+    rate_limit: int | None = None
+    rate_window_s: float = 1.0
 
     def __post_init__(self):
         if self.bucket_sizes is not None:
@@ -348,6 +357,13 @@ class ServeSpec:
         if not isinstance(self.oversample, int) or self.oversample < 1:
             raise ValueError(f"oversample must be a positive int, got "
                              f"{self.oversample!r}")
+        if self.rate_limit is not None and (
+                not isinstance(self.rate_limit, int) or self.rate_limit < 1):
+            raise ValueError(f"rate_limit must be a positive int or None, "
+                             f"got {self.rate_limit!r}")
+        if not (float(self.rate_window_s) > 0.0):
+            raise ValueError(f"rate_window_s must be > 0, got "
+                             f"{self.rate_window_s!r}")
 
     def buckets(self) -> tuple:
         """The bucket ladder, ascending."""
@@ -357,6 +373,96 @@ class ServeSpec:
         while b <= self.max_batch:
             out.append(b)
             b *= 2
+        return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """How LM decode traffic is served (repro.serve.decode): a fixed pool
+    of ``slots`` decode slots shares one pre-allocated KV/state cache
+    sized ``(slots, max_seq)`` (priced by ``models.cache.cache_nbytes``);
+    each jitted step advances every occupied slot one token and freed
+    slots admit queued requests at the next step boundary.
+
+    ``slots``          — pool width (the decode step's compiled batch);
+    ``max_seq``        — per-slot sequence capacity: a request needs
+                         ``prompt_len + max_new <= max_seq``;
+    ``prefill_buckets``— ascending prompt-length ladder: a prefill
+                         dispatch pads its prompts to the smallest bucket
+                         >= the longest admitted prompt, so prefill
+                         compiles at most ``len(prefill_buckets)``
+                         programs (powers of two from 8 to ``max_seq``
+                         when not given);
+    ``flush_ms``       — admission deadline (the MicroBatcher
+                         size-or-deadline policy applied to prompt
+                         ingestion): a partial prefill batch dispatches
+                         once its oldest queued request has waited this
+                         long;
+    ``admit_min``      — re-admission batching: while the pool is busy,
+                         wait until at least this many slots are free
+                         before paying a prefill dispatch (each prefill
+                         scans a whole bucket at pool width, so admitting
+                         one slot at a time wastes most of the scan).
+                         Admission never waits when the pool is idle or
+                         the whole queue fits the free slots, so progress
+                         is unconditional.  0 (default) = auto:
+                         ``max(1, slots // 4)``;
+    ``eos_id``         — optional stop token: a slot emitting it frees at
+                         the next step boundary;
+    ``temperature``    — 0.0 = greedy argmax; > 0 samples each token with
+                         a key folded from (seed, request_id, position),
+                         so sampled tokens stay a pure function of the
+                         request identity, never of batch-mates."""
+
+    slots: int = 8
+    max_seq: int = 128
+    prefill_buckets: tuple | None = None
+    flush_ms: float = 2.0
+    admit_min: int = 0
+    eos_id: int | None = None
+    temperature: float = 0.0
+
+    def __post_init__(self):
+        if not isinstance(self.slots, int) or self.slots < 1:
+            raise ValueError(f"slots must be a positive int, got "
+                             f"{self.slots!r}")
+        if not isinstance(self.max_seq, int) or self.max_seq < 2:
+            raise ValueError(f"max_seq must be an int >= 2, got "
+                             f"{self.max_seq!r}")
+        if self.prefill_buckets is not None:
+            object.__setattr__(self, "prefill_buckets",
+                               tuple(self.prefill_buckets))
+            bs = self.prefill_buckets
+            if not bs or any(not isinstance(b, int) or b < 1 for b in bs) \
+                    or list(bs) != sorted(set(bs)) or bs[-1] > self.max_seq:
+                raise ValueError(
+                    f"prefill_buckets must be strictly ascending positive "
+                    f"ints <= max_seq, got {self.prefill_buckets!r}")
+        if not (float(self.flush_ms) >= 0.0):
+            raise ValueError(f"flush_ms must be >= 0, got "
+                             f"{self.flush_ms!r}")
+        if not isinstance(self.admit_min, int) or not (
+                0 <= self.admit_min <= self.slots):
+            raise ValueError(f"admit_min must be an int in [0, slots], "
+                             f"got {self.admit_min!r}")
+        if self.eos_id is not None and (
+                not isinstance(self.eos_id, int) or self.eos_id < 0):
+            raise ValueError(f"eos_id must be an int >= 0 or None, got "
+                             f"{self.eos_id!r}")
+        if not (float(self.temperature) >= 0.0):
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature!r}")
+
+    def buckets(self) -> tuple:
+        """The prompt-length ladder, ascending (largest covers max_seq so
+        any admissible prompt fits some bucket)."""
+        if self.prefill_buckets is not None:
+            return self.prefill_buckets
+        out, b = [], 8
+        while b < self.max_seq:
+            out.append(b)
+            b *= 2
+        out.append(self.max_seq)
         return tuple(out)
 
 
@@ -383,7 +489,10 @@ class FederationSpec:
 
     ``serve`` is optional (``None`` = serving defaults): it describes how
     the trained generator is served (repro.serve.GenerationService reads
-    it from a restored session's manifest), not how training runs."""
+    it from a restored session's manifest), not how training runs.
+    ``decode`` likewise describes the continuous-batching LM decode
+    engine (repro.serve.decode) for runs whose critic backbone doubles
+    as a language model (``core.distgan_lm``)."""
 
     approach: str
     batch_size: int = 64
@@ -395,6 +504,7 @@ class FederationSpec:
     backend: BackendSpec = dataclasses.field(default_factory=BackendSpec)
     combine: CombineSpec = dataclasses.field(default_factory=CombineSpec)
     serve: ServeSpec | None = None
+    decode: DecodeSpec | None = None
 
     def __post_init__(self):
         approach = resolve_approach(self.approach)  # raises on unknown
@@ -454,7 +564,7 @@ class FederationSpec:
         for key, sub in (("engine", EngineSpec),
                          ("participation", ParticipationSpec),
                          ("backend", BackendSpec), ("combine", CombineSpec),
-                         ("serve", ServeSpec)):
+                         ("serve", ServeSpec), ("decode", DecodeSpec)):
             if key in d and isinstance(d[key], dict):
                 d[key] = _sub_spec(sub, d[key], key)
         return cls(**d)

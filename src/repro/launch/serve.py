@@ -1,11 +1,16 @@
 """Serving launcher: batched greedy decode against the KV/state cache.
 
-``greedy_decode`` / ``cache_nbytes`` are the one shared implementation
-of the LM serving loop — the CLI below and ``examples/serve_batched.py``
-both drive them (the loop used to be copy-pasted between the two).
+``greedy_decode`` is the simple per-request serving loop — the CLI below
+and ``examples/serve_batched.py`` both drive it (the loop used to be
+copy-pasted between the two); ``--continuous`` runs the same workload
+through the slot-based continuous-batching engine
+(``repro.serve.decode``), which shares one pre-allocated cache pool
+across requests instead of allocating per call.  ``cache_nbytes`` is
+re-exported from its canonical home in ``repro.models.cache`` (it moved
+there so the slot-pool code prices its block with the same function).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m --reduced \
-      --batch 4 --prompt-len 32 --gen 32
+      --batch 4 --prompt-len 32 --gen 32 [--continuous --slots 8]
 """
 
 from __future__ import annotations
@@ -19,6 +24,7 @@ import jax.numpy as jnp
 from repro.configs.base import get_config
 from repro.data.synthetic import synthetic_batch_for
 from repro.models import model as M
+from repro.models.cache import cache_nbytes  # noqa: F401  (re-export)
 
 
 def greedy_decode(cfg, params, prompt, gen_len: int, *, src_embeds=None):
@@ -44,13 +50,6 @@ def greedy_decode(cfg, params, prompt, gen_len: int, *, src_embeds=None):
     return jnp.concatenate(out, axis=1)
 
 
-def cache_nbytes(cfg, batch: int, seq_len: int) -> int:
-    """Decode-cache footprint for a (batch, seq_len) serving shape, from
-    the abstract cache spec (nothing is allocated)."""
-    return sum(s.size * jnp.dtype(s.dtype).itemsize
-               for s in jax.tree.leaves(M.cache_spec(cfg, batch, seq_len)))
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -59,6 +58,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve through the slot-based continuous-"
+                         "batching engine instead of per-request greedy")
+    ap.add_argument("--slots", type=int, default=8,
+                    help="decode-slot pool width (with --continuous)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -67,14 +71,38 @@ def main():
     params = M.init_params(cfg, jax.random.key(args.seed))
     batch = synthetic_batch_for(cfg, args.batch, args.prompt_len,
                                 jax.random.key(args.seed + 1))
-    t0 = time.perf_counter()
-    gen = greedy_decode(cfg, params, batch["tokens"], args.gen,
-                        src_embeds=batch.get("src_embeds"))
-    gen = jax.device_get(gen)
-    dt = time.perf_counter() - t0
-    print(f"[serve] {cfg.name}: generated {gen.shape} in {dt:.1f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
-    print("[serve] first row:", gen[0, :16].tolist())
+
+    if args.continuous:
+        from repro.core.spec import DecodeSpec
+        from repro.serve.decode import DecodeEngine, DecodeRequest
+
+        spec = DecodeSpec(slots=args.slots,
+                          max_seq=args.prompt_len + args.gen)
+        eng = DecodeEngine(cfg, params, spec)
+        print(f"[serve] slot pool: {spec.slots} x {spec.max_seq} = "
+              f"{eng.pool_nbytes / 1e6:.2f} MB shared cache block")
+        prompts = jax.device_get(batch["tokens"])
+        t0 = time.perf_counter()
+        futs = [eng.submit(DecodeRequest(user_id=i, prompt=p,
+                                         max_new=args.gen))
+                for i, p in enumerate(prompts)]
+        eng.drain()
+        gen = jnp.stack([jnp.asarray(f.result()) for f in futs])
+        dt = time.perf_counter() - t0
+        st = eng.engine_stats()
+        print(f"[serve] {cfg.name}: generated {gen.shape} in {dt:.1f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s incl. compile); "
+              f"programs {st['programs']}, "
+              f"mean occupancy {st.get('mean_occupancy', 0):.1f}")
+    else:
+        t0 = time.perf_counter()
+        gen = greedy_decode(cfg, params, batch["tokens"], args.gen,
+                            src_embeds=batch.get("src_embeds"))
+        gen = jax.device_get(gen)
+        dt = time.perf_counter() - t0
+        print(f"[serve] {cfg.name}: generated {gen.shape} in {dt:.1f}s "
+              f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("[serve] first row:", jax.device_get(gen)[0, :16].tolist())
 
 
 if __name__ == "__main__":

@@ -4,6 +4,15 @@ Caches are plain nested dicts whose leaves carry a leading ``layers`` (or
 ``groups``) dim so they scan together with the stacked layer params.
 ``cache_spec`` returns ShapeDtypeStructs (for dry-runs — no allocation);
 ``init_cache`` materializes zeros (for real decode on CPU smoke tests).
+
+Slot-pool layout (continuous-batching serve, ``repro.serve.decode``):
+every leaf of every family carries the batch dim at **axis 1** — ``(L, B,
+...)`` or ``(G, B, ...)`` — so a cache of width S doubles as a pool of S
+independent decode *slots*.  ``cache_nbytes`` prices the pool from the
+abstract spec (nothing allocated); ``reset_slots`` zeroes a subset of
+slots in place and ``merge_slots`` publishes freshly-prefilled rows into
+their assigned slots — both uniform across all cache families because
+they only ever touch axis 1.
 """
 
 from __future__ import annotations
@@ -79,6 +88,44 @@ def cache_spec(cfg, batch: int, max_len: int):
 def init_cache(cfg, batch: int, max_len: int):
     spec = cache_spec(cfg, batch, max_len)
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), spec)
+
+
+def cache_nbytes(cfg, batch: int, seq_len: int) -> int:
+    """Decode-cache footprint for a (batch, seq_len) serving shape, from
+    the abstract cache spec (nothing is allocated).  This is the single
+    pricing function for both the per-request caches of
+    ``launch.serve.greedy_decode`` and the slot pool of the
+    continuous-batching engine (batch = slots, seq_len = max_seq)."""
+    return sum(s.size * jnp.dtype(s.dtype).itemsize
+               for s in jax.tree.leaves(cache_spec(cfg, batch, seq_len)))
+
+
+def _slot_mask(valid, leaf):
+    """Broadcast a per-slot bool (B,) against a (L, B, ...) leaf."""
+    return jnp.reshape(valid, (1, -1) + (1,) * (leaf.ndim - 2))
+
+
+def reset_slots(cache, valid):
+    """Zero the slots where ``valid`` (bool (B,)) is True, leaving every
+    other slot's state bit-untouched — the per-slot reset that keeps a
+    freed slot from leaking its previous request's KV/conv/SSM state into
+    the next tenant.  Pure (jit-friendly); axis-1-uniform across cache
+    families."""
+    valid = jnp.asarray(valid)
+    return jax.tree.map(
+        lambda c: jnp.where(_slot_mask(valid, c), jnp.zeros_like(c), c),
+        cache)
+
+
+def merge_slots(pool, fresh, valid):
+    """Publish ``fresh`` (same pool-wide layout) into ``pool`` for the
+    slots where ``valid`` is True; all other slots keep ``pool``'s bits.
+    Used by the prefill path: a prefilled row REPLACES its slot's entire
+    state (the fresh side starts from zeros), so admission doubles as the
+    per-slot reset."""
+    valid = jnp.asarray(valid)
+    return jax.tree.map(
+        lambda p, f: jnp.where(_slot_mask(valid, p), f, p), pool, fresh)
 
 
 def cache_logical_axes(cfg):

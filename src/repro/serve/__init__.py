@@ -1,9 +1,12 @@
 """Multi-tenant generation serving over a FederationSession: bucketed
-sampler engine, micro-batching scheduler, hot-swappable service."""
+sampler engine, micro-batching scheduler, continuous-batching decode
+engine, hot-swappable service."""
 
+from repro.serve.decode import DecodeEngine, DecodeRequest
 from repro.serve.sampler import SamplerEngine
-from repro.serve.scheduler import MicroBatcher, SampleRequest
-from repro.serve.service import GenerationService
+from repro.serve.scheduler import MicroBatcher, SampleRequest, flush_due
+from repro.serve.service import GenerationService, RateLimitExceeded
 
-__all__ = ["SamplerEngine", "MicroBatcher", "SampleRequest",
-           "GenerationService"]
+__all__ = ["SamplerEngine", "MicroBatcher", "SampleRequest", "flush_due",
+           "DecodeEngine", "DecodeRequest", "GenerationService",
+           "RateLimitExceeded"]

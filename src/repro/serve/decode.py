@@ -1,0 +1,471 @@
+"""Slot-based continuous-batching LM decode engine.
+
+``launch.serve.greedy_decode`` serves one request at a time: every
+request pays its own prefill, its own jit dispatches, and the model sits
+idle between requests.  This engine keeps a fixed pool of ``slots``
+decode *slots* sharing ONE pre-allocated KV/state cache block — shaped
+``(slots, max_seq)`` per the family layouts in ``repro.models.cache``
+and priced by ``cache_nbytes`` — and runs continuous batching over it:
+
+* **one decode-step program, ever**: each jitted step advances ALL
+  occupied slots one token under a ``valid`` mask (vacant slots compute
+  garbage that a ``jnp.where`` discards bit-exactly).  The program's
+  shape never depends on the request mix, so there is no recompile and
+  no per-request dispatch;
+* **bucketed prefill**: queued prompts are admitted in batches through a
+  prompt-length bucket ladder (``DecodeSpec.buckets()``) under the same
+  size-or-deadline flush policy as the sample micro-batcher
+  (``scheduler.flush_due``): a prefill dispatch pads its prompts to one
+  bucket, scans it at full pool width with per-row length masks, and
+  merges the finished rows into their slots (``cache.merge_slots`` — a
+  where-select, never a scatter, so duplicate-free and deterministic).
+  Prefill compiles at most ``len(buckets)`` programs; the engine's total
+  program count is bounded by ``len(buckets) + 1``;
+* **per-step admission**: a slot freed by EOS or length limit admits a
+  queued request at the next step boundary — in-flight requests never
+  restart, arriving requests never wait for the batch to drain.
+
+Byte-determinism contract (the serve-side invariant this repo pins
+everywhere): a request's generated tokens are a pure function of
+``(params, prompt, seed, request_id)``.  Slot assignment, batch-mates,
+admission order, and the prefill bucket a prompt lands in are observable
+only as latency, never as different bytes:
+
+* every per-row computation runs **row-wise under vmap** at fixed width
+  ``slots`` — a row's math touches only its own cache row, token, and
+  position, and the program shape is constant, so batch-mate *values*
+  cannot perturb a row's bits;
+* sampling keys derive inside the program as
+  ``fold_in(fold_in(key(seed), request_id), position)`` — position is
+  the absolute sequence index of the token being chosen, identical
+  whether it is chosen by the prefill scan or a later decode step;
+* a larger prefill bucket only appends masked scan steps whose cache and
+  output updates are exact ``where`` identities.
+
+:meth:`replay` re-derives any request's tokens from its identity alone
+(scratch pool, slot 0) and is byte-identical to what was served.
+
+Driving: the engine is synchronous — ``step()`` advances one boundary,
+``drain()`` runs to empty.  One thread drives steps (the pool buffers
+are donated across dispatches); ``submit`` is thread-safe and may land
+from anywhere.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.spec import DecodeSpec
+from repro.models import model as M
+from repro.models.cache import cache_nbytes, merge_slots
+from repro.serve.scheduler import flush_due
+
+_OCC_TRACE_CAP = 4096     # bounded slot-occupancy trace (bench/docs)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeRequest:
+    """One tenant's ask: continue ``prompt`` for up to ``max_new`` tokens
+    under its own ``seed`` (ignored at temperature 0)."""
+
+    user_id: int
+    prompt: tuple
+    max_new: int
+    seed: int = 0
+
+    def __post_init__(self):
+        toks = tuple(int(t) for t in np.asarray(self.prompt).reshape(-1))
+        object.__setattr__(self, "prompt", toks)
+        if not toks or any(t < 0 for t in toks):
+            raise ValueError(f"prompt must be a non-empty sequence of "
+                             f"token ids >= 0, got {self.prompt!r}")
+        if not isinstance(self.max_new, int) or self.max_new < 1:
+            raise ValueError(f"max_new must be a positive int, got "
+                             f"{self.max_new!r}")
+
+
+class _Pending:
+    """A submitted request with its slot bookkeeping."""
+
+    __slots__ = ("req", "rid", "future", "out", "submit_t")
+
+    def __init__(self, req: DecodeRequest, rid: int, submit_t: float):
+        self.req = req
+        self.rid = rid
+        self.future: Future = Future()
+        self.out: list = []          # generated token ids, in order
+        self.submit_t = submit_t
+
+
+def _u32(x) -> np.uint32:
+    # int64 first so negative seeds wrap instead of raising
+    return np.uint32(np.int64(x) & 0xFFFFFFFF)
+
+
+class DecodeEngine:
+    """Continuous-batching decode over one LM's params.
+
+    ``cfg`` is a ``ModelConfig`` (any non-audio cache family), ``params``
+    its parameter tree — e.g. a federation-trained critic exported via
+    ``core.distgan_lm.critic_lm_params``.  Futures resolve to the
+    ``(n_generated,)`` int32 token array (n <= max_new; an emitted
+    ``eos_id`` is included and ends the request)."""
+
+    def __init__(self, cfg, params, spec: DecodeSpec | None = None, *,
+                 clock: Callable = time.monotonic):
+        if cfg.arch_type == "audio":
+            raise NotImplementedError(
+                "encoder-decoder decode needs per-request source embeds; "
+                "use launch.serve.greedy_decode for the audio family")
+        self.cfg = cfg
+        self.spec = spec or DecodeSpec()
+        self.clock = clock
+        self._params = params
+        S, T = self.spec.slots, self.spec.max_seq
+        self.pool = M.init_cache(cfg, S, T)   # THE cache block, reused forever
+        self._cache_axes = jax.tree.map(lambda _: 1, M.cache_spec(cfg, S, T))
+        self._slot_req: list = [None] * S     # _Pending per occupied slot
+        self._toks = np.zeros(S, np.int32)    # next token to feed, per slot
+        self._pos = np.zeros(S, np.int32)     # its feed position
+        self._seeds = np.zeros(S, np.uint32)
+        self._rids = np.zeros(S, np.uint32)
+        self._queue: collections.deque = collections.deque()
+        self._next_rid = 0
+        self._lock = threading.Lock()         # queue + rid counter
+        self._decode_fn = None
+        self._prefill_fns: dict = {}
+        self.stats = {"steps": 0, "step_slots": 0, "step_idle_slots": 0,
+                      "prefills": 0, "prefill_slots": 0,
+                      "prefill_padded_tokens": 0, "completed": 0,
+                      "generated_tokens": 0}
+        self.occupancy_trace: list = []       # occupied-slot count per step
+
+    # -- sizing / program accounting ---------------------------------------
+
+    @property
+    def pool_nbytes(self) -> int:
+        """Bytes of the shared cache block — ``cache_nbytes`` is the
+        single pricing function (pinned against the live allocation in
+        tests/test_decode.py)."""
+        return cache_nbytes(self.cfg, self.spec.slots, self.spec.max_seq)
+
+    @property
+    def program_counts(self) -> dict:
+        """Compiled program census: bounded by len(buckets) + 1 (the
+        paper_decode bench gates on this)."""
+        return {"prefill": len(self._prefill_fns),
+                "decode": int(self._decode_fn is not None)}
+
+    def bucket_for(self, prompt_len: int) -> int:
+        for b in self.spec.buckets():
+            if b >= prompt_len:
+                return b
+        raise ValueError(f"prompt length {prompt_len} exceeds the largest "
+                         f"prefill bucket {self.spec.buckets()[-1]}")
+
+    # -- compiled programs -------------------------------------------------
+
+    def _row_step(self, params, cache_row, tok, pos):
+        """One slot's decode step: (cache leaves with the batch axis
+        squeezed out, scalar token/position) -> ((V,) logits, new row)."""
+        cache_b = jax.tree.map(lambda x: jnp.expand_dims(x, 1), cache_row)
+        logits, nc = M.decode_step(params, cache_b, tok[None, None], pos,
+                                   self.cfg)
+        return logits[0, 0], jax.tree.map(lambda x: jnp.squeeze(x, 1), nc)
+
+    def _select(self, logits, seed, rid, keypos):
+        """Choose the token at absolute position ``keypos`` from one
+        row's logits — the ONLY place randomness enters, keyed purely by
+        (seed, request_id, position)."""
+        if float(self.spec.temperature) == 0.0:
+            return jnp.argmax(logits).astype(jnp.int32)
+        k = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(seed), rid), keypos)
+        return jax.random.categorical(
+            k, logits / self.spec.temperature).astype(jnp.int32)
+
+    def _decode_prog(self):
+        if self._decode_fn is None:
+            axes = self._cache_axes
+
+            def run(params, pool, toks, pos, valid, seeds, rids):
+                logits, nc = jax.vmap(
+                    self._row_step, in_axes=(None, axes, 0, 0),
+                    out_axes=(0, axes))(params, pool, toks, pos)
+                nxt = jax.vmap(self._select)(logits, seeds, rids, pos + 1)
+                pool = merge_slots(pool, nc, valid)
+                return jnp.where(valid, nxt, 0), pool
+
+            # the pool updates in place every step: donate it
+            self._decode_fn = jax.jit(run, donate_argnums=(1,))
+        return self._decode_fn
+
+    def _prefill_prog(self, bucket: int):
+        if bucket not in self._prefill_fns:
+            axes = self._cache_axes
+            S, T = self.spec.slots, self.spec.max_seq
+            cfg = self.cfg
+
+            def run(params, pool, toks, lens, seeds, rids):
+                # toks (S, bucket) int32, lens (S,) — 0 marks a row that
+                # is NOT being admitted (its scratch compute is dropped)
+                fresh = M.init_cache(cfg, S, T)
+                first = jnp.zeros(S, jnp.int32)
+
+                def body(carry, xs):
+                    cache, first = carry
+                    i, tok_i = xs
+                    pos = jnp.full((S,), i, jnp.int32)
+                    logits, nc = jax.vmap(
+                        self._row_step, in_axes=(None, axes, 0, 0),
+                        out_axes=(0, axes))(params, cache, tok_i, pos)
+                    # rows past their own length take exact identity
+                    # steps — bucket choice is invisible in the bytes
+                    cache = merge_slots(cache, nc, i < lens)
+                    sel = jax.vmap(self._select)(logits, seeds, rids,
+                                                 pos + 1)
+                    first = jnp.where(i == lens - 1, sel, first)
+                    return (cache, first), None
+
+                (fresh, first), _ = jax.lax.scan(
+                    body, (fresh, first),
+                    (jnp.arange(bucket, dtype=jnp.int32), toks.T))
+                valid = lens > 0
+                # a prefilled row REPLACES its slot wholesale (fresh rows
+                # start from zeros), so admission doubles as slot reset
+                pool = merge_slots(pool, fresh, valid)
+                return jnp.where(valid, first, 0), pool
+
+            self._prefill_fns[bucket] = jax.jit(run, donate_argnums=(1,))
+        return self._prefill_fns[bucket]
+
+    # -- submission --------------------------------------------------------
+
+    def publish(self, params) -> None:
+        """Hot-swap the served params (the service's refresh hook).  The
+        next dispatch sees the new tree; slots mid-request continue on
+        it too — refresh between requests if that matters."""
+        self._params = params
+
+    def submit(self, req: DecodeRequest, *,
+               request_id: int | None = None) -> Future:
+        """Enqueue; returns the future of the (n_generated,) int32 token
+        array.  ``request_id`` pins the RNG identity for replay
+        (defaults to the monotonic submission counter)."""
+        plen = len(req.prompt)
+        if plen + req.max_new > self.spec.max_seq:
+            raise ValueError(
+                f"prompt ({plen}) + max_new ({req.max_new}) exceeds "
+                f"max_seq {self.spec.max_seq}")
+        self.bucket_for(plen)   # raises if no bucket holds the prompt
+        with self._lock:
+            if request_id is None:
+                request_id = self._next_rid
+            self._next_rid = max(self._next_rid, request_id) + 1
+            p = _Pending(req, request_id, self.clock())
+            self._queue.append(p)
+        return p.future
+
+    def reserve_request_id(self) -> int:
+        with self._lock:
+            rid = self._next_rid
+            self._next_rid += 1
+            return rid
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def occupied(self) -> int:
+        return sum(r is not None for r in self._slot_req)
+
+    # -- the continuous-batching loop --------------------------------------
+
+    def _done(self, p: _Pending, tok: int) -> bool:
+        eos = self.spec.eos_id
+        return len(p.out) >= p.req.max_new or (eos is not None
+                                               and tok == eos)
+
+    def _finish(self, slot: int, p: _Pending) -> None:
+        self._slot_req[slot] = None
+        self.stats["completed"] += 1
+        if not p.future.done():
+            p.future.set_result(np.asarray(p.out, np.int32))
+
+    def _maybe_admit(self, force: bool) -> int:
+        """Admit due queued requests into free slots via ONE bucketed
+        prefill dispatch; returns requests admitted.
+
+        Re-admission is BATCHED: a prefill scans a whole bucket at pool
+        width regardless of how many rows it fills, so while the pool is
+        still decoding we hold the queue until ``admit_min`` slots have
+        freed (or the whole queue fits) and amortize the scan over the
+        group.  Admission timing is invisible in the output bytes — each
+        row's tokens are a pure function of the request — so this trades
+        only time-to-first-token, bounded by the occupied slots' own
+        completions."""
+        with self._lock:
+            free = [s for s in range(self.spec.slots)
+                    if self._slot_req[s] is None]
+            if not free or not self._queue:
+                return 0
+            busy = len(free) < self.spec.slots
+            admit_min = self.spec.admit_min or max(1, self.spec.slots // 4)
+            if busy and len(free) < min(admit_min, len(self._queue)):
+                return 0
+            if not force and not flush_due(
+                    len(self._queue), len(free), self._queue[0].submit_t,
+                    self.clock(), self.spec.flush_ms / 1e3):
+                return 0
+            take = [self._queue.popleft()
+                    for _ in range(min(len(free), len(self._queue)))]
+        bucket = self.bucket_for(max(len(p.req.prompt) for p in take))
+        S = self.spec.slots
+        toks = np.zeros((S, bucket), np.int32)
+        lens = np.zeros(S, np.int32)
+        slots = free[:len(take)]
+        for s, p in zip(slots, take):
+            pl = len(p.req.prompt)
+            toks[s, :pl] = p.req.prompt
+            lens[s] = pl
+            self._seeds[s] = _u32(p.req.seed)
+            self._rids[s] = _u32(p.rid)
+            self._slot_req[s] = p
+        first, self.pool = self._prefill_prog(bucket)(
+            self._params, self.pool, toks, lens, self._seeds, self._rids)
+        first = np.asarray(first)
+        self.stats["prefills"] += 1
+        self.stats["prefill_slots"] += len(take)
+        self.stats["prefill_padded_tokens"] += sum(
+            bucket - len(p.req.prompt) for p in take)
+        for s, p in zip(slots, take):
+            t = int(first[s])
+            p.out.append(t)
+            self.stats["generated_tokens"] += 1
+            self._pos[s] = len(p.req.prompt)
+            self._toks[s] = t
+            if self._done(p, t):      # max_new == 1, or the prompt's
+                self._finish(s, p)    # continuation opens with EOS
+        return len(take)
+
+    def step(self, *, force_admit: bool = False) -> int:
+        """One engine boundary: admit due queued requests into free
+        slots, then advance every occupied slot one token.  Returns the
+        number of slots advanced (0 = the engine is idle)."""
+        self._maybe_admit(force_admit)
+        S = self.spec.slots
+        occ = [s for s in range(S) if self._slot_req[s] is not None]
+        if not occ:
+            return 0
+        valid = np.zeros(S, bool)
+        valid[occ] = True
+        nxt, self.pool = self._decode_prog()(
+            self._params, self.pool, self._toks, self._pos, valid,
+            self._seeds, self._rids)
+        nxt = np.asarray(nxt)
+        self.stats["steps"] += 1
+        self.stats["step_slots"] += len(occ)
+        self.stats["step_idle_slots"] += S - len(occ)
+        if len(self.occupancy_trace) < _OCC_TRACE_CAP:
+            self.occupancy_trace.append(len(occ))
+        for s in occ:
+            p = self._slot_req[s]
+            t = int(nxt[s])
+            p.out.append(t)
+            self.stats["generated_tokens"] += 1
+            self._pos[s] += 1
+            self._toks[s] = t
+            if self._done(p, t):
+                self._finish(s, p)
+        return len(occ)
+
+    def drain(self) -> None:
+        """Step until the queue is empty and every slot is free (ignores
+        the admission deadline — the caller has decided now is dispatch
+        time)."""
+        while True:
+            with self._lock:
+                idle = not self._queue
+            if idle and not any(r is not None for r in self._slot_req):
+                return
+            self.step(force_admit=True)
+
+    # -- replay / verification ---------------------------------------------
+
+    def generate(self, user_id: int, prompt, max_new: int, seed: int = 0,
+                 *, request_id: int | None = None) -> np.ndarray:
+        """Synchronous convenience: submit + drain + result."""
+        fut = self.submit(DecodeRequest(user_id=int(user_id), prompt=prompt,
+                                        max_new=int(max_new),
+                                        seed=int(seed)),
+                          request_id=request_id)
+        if not fut.done():
+            self.drain()
+        return fut.result()
+
+    def replay(self, prompt, max_new: int, seed: int = 0, *,
+               request_id: int) -> np.ndarray:
+        """Re-derive a request's tokens from ``(params, prompt, seed,
+        request_id)`` alone — byte-for-byte what the pooled path served
+        (for the same published params), regardless of the slot it ran
+        in, its batch-mates, or how admissions were batched.  Runs on a
+        scratch pool through the SAME compiled programs (compiles
+        nothing new past the live path's bucket)."""
+        req = DecodeRequest(user_id=-1, prompt=prompt, max_new=int(max_new),
+                            seed=int(seed))
+        S = self.spec.slots
+        plen = len(req.prompt)
+        if plen + req.max_new > self.spec.max_seq:
+            raise ValueError(
+                f"prompt ({plen}) + max_new ({req.max_new}) exceeds "
+                f"max_seq {self.spec.max_seq}")
+        bucket = self.bucket_for(plen)
+        pool = M.init_cache(self.cfg, S, self.spec.max_seq)
+        toks = np.zeros((S, bucket), np.int32)
+        toks[0, :plen] = req.prompt
+        lens = np.zeros(S, np.int32)
+        lens[0] = plen
+        seeds = np.zeros(S, np.uint32)
+        seeds[0] = _u32(req.seed)
+        rids = np.zeros(S, np.uint32)
+        rids[0] = _u32(request_id)
+        first, pool = self._prefill_prog(bucket)(
+            self._params, pool, toks, lens, seeds, rids)
+        out = [int(np.asarray(first)[0])]
+        feed = np.zeros(S, np.int32)
+        feed[0] = out[0]
+        pos = np.zeros(S, np.int32)
+        pos[0] = plen
+        valid = np.zeros(S, bool)
+        valid[0] = True
+        eos = self.spec.eos_id
+        while len(out) < req.max_new and (eos is None or out[-1] != eos):
+            nxt, pool = self._decode_prog()(
+                self._params, pool, feed, pos, valid, seeds, rids)
+            t = int(np.asarray(nxt)[0])
+            out.append(t)
+            pos[0] += 1
+            feed[0] = t
+        return np.asarray(out, np.int32)
+
+    # -- accounting --------------------------------------------------------
+
+    def engine_stats(self) -> dict:
+        s = dict(self.stats)
+        s["programs"] = self.program_counts
+        s["pool_nbytes"] = self.pool_nbytes
+        s["pending"] = self.pending()
+        s["occupied"] = self.occupied()
+        if self.occupancy_trace:
+            s["mean_occupancy"] = (sum(self.occupancy_trace)
+                                   / len(self.occupancy_trace))
+        return s

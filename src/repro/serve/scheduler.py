@@ -39,6 +39,19 @@ from typing import Any, Callable
 import numpy as np
 
 
+def flush_due(pending: int, capacity: int, oldest_t: float, now: float,
+              deadline_s: float) -> bool:
+    """The size-or-deadline flush policy, shared by :class:`MicroBatcher`
+    (sample slots vs the largest bucket) and the decode engine's
+    admission queue (queued prompts vs free slots,
+    ``repro.serve.decode``): dispatch when a full ``capacity`` of work is
+    pending (size), or when the oldest pending submission has waited
+    ``deadline_s`` (deadline — the latency bound for sparse traffic)."""
+    if pending <= 0:
+        return False
+    return pending >= capacity or now - oldest_t >= deadline_s
+
+
 @dataclasses.dataclass(frozen=True)
 class SampleRequest:
     """One tenant's ask: ``n`` samples under its own ``seed``.  ``cond``
@@ -141,8 +154,8 @@ class MicroBatcher:
         if not self._queue:
             return False
         slots = sum(p.req.n - p.next_off for p in self._queue)
-        return (slots >= self.max_bucket
-                or now - self._queue[0].submit_t >= self.flush_deadline_s)
+        return flush_due(slots, self.max_bucket, self._queue[0].submit_t,
+                         now, self.flush_deadline_s)
 
     def due(self) -> bool:
         with self._lock:

@@ -22,6 +22,15 @@ restored from a msgpack checkpoint — into that artifact's service:
   in tests/test_serve.py);
 * **accounting**: per-user requests / samples / bytes served, in the
   same spirit as the training side's upload-byte accounting;
+* **admission control**: ``ServeSpec.rate_limit`` caps any tenant's
+  request rate (sample and decode traffic share one sliding window);
+  over-limit submissions raise :class:`RateLimitExceeded` and land in
+  the tenant's ``rejected`` accounting row — a noisy neighbour is
+  throttled at the door, before it costs a dispatch;
+* **mixed traffic**: :meth:`attach_lm` binds a continuous-batching
+  decode engine (``repro.serve.decode``) so the same facade routes GAN
+  ``SampleRequest``s and LM decode requests — :meth:`drain` drives
+  both, and decode token counts join the per-user accounting;
 * **approach-aware filtering**: for approaches that keep per-user
   discriminator rows in the store (``ApproachDef.user_axis``),
   :meth:`sample_filtered` draws ``oversample * n`` candidates and keeps
@@ -33,15 +42,32 @@ from __future__ import annotations
 
 import collections
 import threading
+import time
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.core.approaches import d_flat_layout
 from repro.core.session import FederationSession
-from repro.core.spec import ServeSpec, resolve_approach
+from repro.core.spec import DecodeSpec, ServeSpec, resolve_approach
+from repro.serve.decode import DecodeEngine, DecodeRequest
 from repro.serve.sampler import SamplerEngine
 from repro.serve.scheduler import MicroBatcher, SampleRequest
+
+
+class RateLimitExceeded(Exception):
+    """A tenant submitted more requests than ``ServeSpec.rate_limit``
+    allows inside one ``rate_window_s`` window.  Carries ``user_id`` so
+    callers can back off per tenant; the rejection is also counted in
+    that tenant's ``rejected`` accounting row."""
+
+    def __init__(self, user_id: int, limit: int, window_s: float):
+        super().__init__(
+            f"user {user_id} exceeded {limit} requests per "
+            f"{window_s:g}s window")
+        self.user_id = user_id
+        self.limit = limit
+        self.window_s = window_s
 
 
 class GenerationService:
@@ -66,7 +92,9 @@ class GenerationService:
         self.generation = 0        # bumped by every refresh()
         self._per_user: dict = collections.defaultdict(
             lambda: {"requests": 0, "samples": 0, "bytes": 0})
+        self._rate_times: dict = collections.defaultdict(collections.deque)
         self._d_layout = d_flat_layout(pair)
+        self.decoder: DecodeEngine | None = None
 
     # -- constructors ------------------------------------------------------
 
@@ -106,6 +134,29 @@ class GenerationService:
             self.generation += 1
             return self.generation
 
+    # -- per-tenant admission control --------------------------------------
+
+    def _admit(self, user_id: int) -> None:
+        """Charge one request against the tenant's sliding rate window;
+        raises :class:`RateLimitExceeded` (and bumps the ``rejected``
+        accounting row) when over ``ServeSpec.rate_limit``.  Sample and
+        decode traffic share the window — the cap is on the tenant, not
+        the traffic class."""
+        limit = self.serve.rate_limit
+        if limit is None:
+            return
+        now = time.monotonic()
+        window = self.serve.rate_window_s
+        with self._accounting_lock:
+            times = self._rate_times[int(user_id)]
+            while times and now - times[0] >= window:
+                times.popleft()
+            if len(times) >= limit:
+                acc = self._per_user[int(user_id)]
+                acc["rejected"] = acc.get("rejected", 0) + 1
+                raise RateLimitExceeded(int(user_id), limit, window)
+            times.append(now)
+
     # -- request path ------------------------------------------------------
 
     def _dispatch(self, bucket: int, seeds, rids, offs) -> np.ndarray:
@@ -119,6 +170,7 @@ class GenerationService:
         """Enqueue a request; returns its future.  Drive the batcher
         with :meth:`drain` (sync) or ``service.batcher.start()``
         (background pump)."""
+        self._admit(user_id)
         req = SampleRequest(user_id=int(user_id), n=int(n), seed=int(seed),
                             cond=cond)
         fut = self.batcher.submit(req, request_id=request_id)
@@ -137,8 +189,64 @@ class GenerationService:
         fut.add_done_callback(account)
         return fut
 
+    # -- LM decode traffic (continuous batching) ---------------------------
+
+    def attach_lm(self, cfg, params, decode: DecodeSpec | None = None
+                  ) -> DecodeEngine:
+        """Bind a continuous-batching decode engine so this facade
+        serves LM decode alongside GAN sampling.  ``cfg``/``params`` are
+        a ``ModelConfig`` + parameter tree — e.g. a federation-trained
+        critic exported via ``core.distgan_lm.critic_lm_params``.
+        ``decode`` defaults to the session spec's ``decode`` block, then
+        to ``DecodeSpec()``."""
+        if decode is None and self.session is not None:
+            decode = self.session.spec.decode
+        self.decoder = DecodeEngine(cfg, params, decode or DecodeSpec())
+        return self.decoder
+
+    def submit_decode(self, user_id: int, prompt, max_new: int,
+                      seed: int = 0, *, request_id: int | None = None):
+        """Enqueue an LM decode request; returns the future of the
+        generated (n,) int32 token array.  Counts against the same
+        per-tenant rate window as sampling; generated tokens and bytes
+        join the tenant's accounting."""
+        if self.decoder is None:
+            raise ValueError("no decode engine attached (call attach_lm "
+                             "with the LM config and params first)")
+        self._admit(user_id)
+        req = DecodeRequest(user_id=int(user_id), prompt=prompt,
+                            max_new=int(max_new), seed=int(seed))
+        fut = self.decoder.submit(req, request_id=request_id)
+        with self._accounting_lock:
+            self._per_user[req.user_id]["requests"] += 1
+
+        def account(f):
+            if f.cancelled() or f.exception() is not None:
+                return
+            arr = f.result()
+            with self._accounting_lock:
+                acc = self._per_user[req.user_id]
+                acc["tokens"] = acc.get("tokens", 0) + len(arr)
+                acc["bytes"] += arr.nbytes
+
+        fut.add_done_callback(account)
+        return fut
+
+    def generate(self, user_id: int, prompt, max_new: int, seed: int = 0,
+                 *, request_id: int | None = None) -> np.ndarray:
+        """Synchronous decode convenience: submit + drain + result."""
+        fut = self.submit_decode(user_id, prompt, max_new, seed,
+                                 request_id=request_id)
+        if not fut.done():
+            self.drain()
+        return fut.result()
+
     def drain(self) -> None:
+        """Drive both traffic classes to empty: flush the sample batcher
+        and run the decode engine until its queue and slots clear."""
         self.batcher.drain()
+        if self.decoder is not None:
+            self.decoder.drain()
 
     def sample(self, user_id: int, n: int, seed: int = 0, *,
                request_id: int | None = None) -> np.ndarray:
@@ -177,6 +285,7 @@ class GenerationService:
         the plain path).  Only approaches that keep per-user D rows
         support this (``ApproachDef.user_axis``); the session accessor
         raises otherwise."""
+        self._admit(user_id)
         if self.session is not None and \
                 not resolve_approach(self.session.spec.approach).user_axis:
             raise ValueError(
@@ -209,11 +318,16 @@ class GenerationService:
         sizes, and the batcher's coalescing stats."""
         with self._accounting_lock:
             per_user = {u: dict(v) for u, v in self._per_user.items()}
-        return {
+        out = {
             "per_user": per_user,
             "total_samples": sum(v["samples"] for v in per_user.values()),
             "total_bytes": sum(v["bytes"] for v in per_user.values()),
+            "total_rejected": sum(v.get("rejected", 0)
+                                  for v in per_user.values()),
             "generation": self.generation,
             "programs": self.engine.program_counts,
             "batcher": dict(self.batcher.stats),
         }
+        if self.decoder is not None:
+            out["decode"] = self.decoder.engine_stats()
+        return out

@@ -90,3 +90,156 @@ def test_hybrid_cache_is_window_bounded():
     c1 = M.cache_spec(cfg, 2, 524288)
     k = c1["groups"]["attn"]["k"]
     assert k.shape[2] == cfg.window  # not 524288
+
+
+# ---------------------------------------------------------------------------
+# Slot-pool cache helpers + the continuous-batching decode engine (PR 6)
+# ---------------------------------------------------------------------------
+
+import numpy as np
+
+from repro.core.spec import DecodeSpec, FederationSpec
+from repro.models.cache import cache_nbytes, merge_slots, reset_slots
+from repro.serve.decode import DecodeEngine, DecodeRequest
+
+
+@pytest.mark.parametrize("arch", FAMILIES)
+def test_cache_nbytes_matches_allocation(arch):
+    """cache_nbytes prices EXACTLY what init_cache allocates, for every
+    cache family and across (slots, seq) shapes — the slot pool's memory
+    budget comes from this one function."""
+    cfg = get_config(arch).reduced()
+    for B, T in [(1, 16), (4, 48)]:
+        cache = M.init_cache(cfg, B, T)
+        alloc = sum(np.asarray(leaf).nbytes
+                    for leaf in jax.tree.leaves(cache))
+        assert cache_nbytes(cfg, B, T) == alloc
+
+
+def test_reset_and_merge_slots_touch_only_valid_rows():
+    """Per-slot reset/merge leak nothing across the pool: only the masked
+    slots change, every other slot is bit-identical."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    pool = jax.tree.map(
+        lambda s: jax.random.normal(jax.random.key(0), s.shape, s.dtype)
+        if jnp.issubdtype(s.dtype, jnp.floating)
+        else jnp.ones(s.shape, s.dtype),
+        M.cache_spec(cfg, 4, 16))
+    valid = np.asarray([True, False, True, False])
+
+    wiped = reset_slots(pool, valid)
+    for p, w in zip(jax.tree.leaves(pool), jax.tree.leaves(wiped)):
+        assert bool(jnp.all(w[:, valid] == 0))
+        assert bool(jnp.all(w[:, ~valid] == p[:, ~valid]))
+
+    fresh = jax.tree.map(lambda x: x + 1 if jnp.issubdtype(
+        x.dtype, jnp.floating) else x, pool)
+    merged = merge_slots(pool, fresh, valid)
+    for p, f, m in zip(jax.tree.leaves(pool), jax.tree.leaves(fresh),
+                       jax.tree.leaves(merged)):
+        assert bool(jnp.all(m[:, valid] == f[:, valid]))
+        assert bool(jnp.all(m[:, ~valid] == p[:, ~valid]))
+
+
+def _mixed_requests(cfg, n, seed=0, max_gen=6):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, cfg.vocab_size, int(pl)).astype(np.int32),
+             int(g))
+            for pl, g in zip(rng.integers(2, 12, n),
+                             rng.integers(2, max_gen + 1, n))]
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "mamba2-780m"])
+def test_engine_bytes_equal_sequential_greedy(arch):
+    """Pooled continuous-batching tokens == per-request greedy decode,
+    byte for byte, at mixed prompt/gen lengths — slot assignment and
+    batch-mates are invisible (attention family + SSM family)."""
+    from repro.launch.serve import greedy_decode
+
+    cfg = get_config(arch).reduced()
+    params = M.init_params(cfg, jax.random.key(1))
+    reqs = _mixed_requests(cfg, 5, seed=2)
+    eng = DecodeEngine(cfg, params, DecodeSpec(slots=3, max_seq=24))
+    futs = [eng.submit(DecodeRequest(user_id=i, prompt=p, max_new=g))
+            for i, (p, g) in enumerate(reqs)]
+    eng.drain()
+    for (p, g), fut in zip(reqs, futs):
+        want = np.asarray(greedy_decode(
+            cfg, params, jnp.asarray(p)[None, :], g))[0]
+        np.testing.assert_array_equal(fut.result(), want)
+    pc = eng.program_counts
+    assert pc["prefill"] <= len(eng.spec.buckets()) and pc["decode"] == 1
+
+
+def test_engine_replay_and_submission_order_invariance():
+    """Tokens are a pure function of (params, prompt, seed, request_id):
+    the same requests re-submitted in reverse order (different slots,
+    different batch-mates) and the solo replay() all agree — including
+    under temperature sampling, where the RNG key is folded from the
+    request identity."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.key(3))
+    reqs = _mixed_requests(cfg, 6, seed=4)
+    spec = DecodeSpec(slots=3, max_seq=24, temperature=0.7)
+    eng = DecodeEngine(cfg, params, spec)
+
+    def serve(order):
+        futs = {i: eng.submit(
+            DecodeRequest(user_id=i, prompt=reqs[i][0],
+                          max_new=reqs[i][1], seed=100 + i),
+            request_id=i) for i in order}
+        eng.drain()
+        return {i: f.result() for i, f in futs.items()}
+
+    a = serve(range(len(reqs)))
+    b = serve(range(len(reqs) - 1, -1, -1))
+    for i in range(len(reqs)):
+        np.testing.assert_array_equal(a[i], b[i])
+        np.testing.assert_array_equal(
+            a[i], eng.replay(reqs[i][0], reqs[i][1], seed=100 + i,
+                             request_id=i))
+
+
+def test_engine_eos_frees_slot_for_reuse():
+    """A slot that emits eos_id finishes early (eos included in the
+    output) and admits the next queued request; the reused slot's tokens
+    still equal their solo replay (reset leaks nothing)."""
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.key(5))
+    probe = DecodeEngine(cfg, params, DecodeSpec(slots=1, max_seq=24))
+    prompt = np.arange(1, 7, dtype=np.int32)
+    toks = probe.generate(0, prompt, 8, request_id=0)
+    eos = int(toks[2])   # a token greedy decode provably emits mid-run
+
+    eng = DecodeEngine(cfg, params,
+                       DecodeSpec(slots=1, max_seq=24, eos_id=eos))
+    first = eng.generate(0, prompt, 8, request_id=0)
+    assert len(first) <= 3 and first[-1] == eos
+    np.testing.assert_array_equal(
+        first, eng.replay(prompt, 8, request_id=0))
+    # the SAME slot then serves a fresh request with clean state
+    reqs = _mixed_requests(cfg, 1, seed=6)
+    (p2, g2), = reqs
+    second = eng.generate(1, p2, g2, request_id=1)
+    np.testing.assert_array_equal(second, eng.replay(p2, g2, request_id=1))
+
+
+def test_decode_spec_manifest_roundtrip_and_validation():
+    """DecodeSpec rides the FederationSpec manifest: to_dict/from_dict
+    round-trips it, unknown keys and bad values are rejected."""
+    spec = FederationSpec(
+        approach="approach1",
+        decode=DecodeSpec(slots=4, max_seq=32, prefill_buckets=(8, 32),
+                          flush_ms=1.0, admit_min=2, eos_id=3,
+                          temperature=0.5))
+    again = FederationSpec.from_dict(spec.to_dict())
+    assert again.decode == spec.decode
+    assert again.decode.buckets() == (8, 32)
+    with pytest.raises(ValueError):
+        DecodeSpec(slots=0)
+    with pytest.raises(ValueError):
+        DecodeSpec(max_seq=16, prefill_buckets=(8, 32))
+    with pytest.raises(ValueError):
+        DecodeSpec(slots=4, admit_min=5)
+    with pytest.raises(ValueError):
+        DecodeSpec(temperature=-0.1)

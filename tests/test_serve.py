@@ -396,3 +396,101 @@ def test_checkpoint_serve_fresh_process_determinism(tmp_path):
                        text=True, env=env, timeout=560)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "SERVE DETERMINISM OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# per-tenant admission control + LM decode routing (PR 6)
+# ---------------------------------------------------------------------------
+
+def test_rate_limit_named_error_rejected_row_and_window_expiry():
+    """Over-limit submissions raise RateLimitExceeded (carrying the
+    tenant), land in the tenant's ``rejected`` accounting row, and the
+    sliding window actually slides — after ``rate_window_s`` the tenant
+    is admitted again.  Other tenants are never affected."""
+    import time as _time
+
+    from repro.serve import RateLimitExceeded
+
+    sess = _session(serve=ServeSpec(max_batch=16, flush_ms=0.5,
+                                    rate_limit=2, rate_window_s=0.2))
+    svc = GenerationService.from_session(sess)
+    svc.submit(0, 2, seed=1)
+    svc.submit(0, 2, seed=2)
+    with pytest.raises(RateLimitExceeded) as ei:
+        svc.submit(0, 2, seed=3)
+    assert ei.value.user_id == 0 and ei.value.limit == 2
+    assert "exceeded 2 requests" in str(ei.value)
+    svc.submit(1, 2, seed=4)          # tenant 1 has its own window
+    svc.drain()
+    st = svc.stats()
+    assert st["per_user"][0]["rejected"] == 1
+    assert st["per_user"][0]["requests"] == 2
+    assert "rejected" not in st["per_user"][1]
+    assert st["total_rejected"] == 1
+    _time.sleep(0.25)                 # window expires
+    svc.submit(0, 2, seed=5)
+    svc.drain()
+    assert svc.stats()["per_user"][0]["rejected"] == 1  # no new rejection
+
+
+def test_service_routes_mixed_sample_and_decode_traffic():
+    """One service, two traffic classes: GAN SampleRequests through the
+    micro-batcher and LM decode through the slot engine, drained by one
+    drain(); decode bytes equal their solo replay, tokens/bytes rows
+    accumulate, and the rate window is SHARED across classes."""
+    from repro.configs.base import get_config
+    from repro.core.spec import DecodeSpec
+    from repro.models import model as M
+    from repro.serve import RateLimitExceeded
+
+    sess = _session(serve=ServeSpec(max_batch=16, flush_ms=0.5,
+                                    rate_limit=3, rate_window_s=60.0))
+    svc = GenerationService.from_session(sess)
+    cfg = get_config("tinyllama-1.1b").reduced()
+    svc.attach_lm(cfg, M.init_params(cfg, jax.random.key(0)),
+                  decode=DecodeSpec(slots=2, max_seq=24))
+
+    sample_fut = svc.submit(0, 4, seed=9)
+    prompt = np.arange(1, 8, dtype=np.int32)
+    dec_fut = svc.submit_decode(0, prompt, 5, seed=1, request_id=0)
+    svc.drain()
+    assert sample_fut.result().shape == (4, 2)
+    toks = dec_fut.result()
+    np.testing.assert_array_equal(
+        toks, svc.decoder.replay(prompt, 5, seed=1, request_id=0))
+    st = svc.stats()
+    acc = st["per_user"][0]
+    assert acc["requests"] == 2 and acc["samples"] == 4
+    assert acc["tokens"] == len(toks)
+    assert st["decode"]["completed"] >= 1
+    # sample + decode share the tenant's window: 2 spent, 1 left
+    svc.submit_decode(0, prompt, 2, seed=2)
+    with pytest.raises(RateLimitExceeded):
+        svc.submit(0, 2, seed=3)
+    svc.drain()
+
+
+def test_critic_backbone_serves_as_lm():
+    """The critic->LM bridge: a critic parameter tree minus its realness
+    head IS a complete tied-embedding LM tree — decode runs and is
+    deterministic under the engine."""
+    from repro.configs.base import get_config
+    from repro.core.distgan_lm import (LMGanConfig, critic_lm_config,
+                                       critic_lm_params, make_lm_pair)
+    from repro.core.spec import DecodeSpec
+    from repro.models.common import build
+    from repro.serve.decode import DecodeEngine
+    import jax.numpy as jnp
+
+    bb = get_config("tinyllama-1.1b").reduced()
+    pair = make_lm_pair(LMGanConfig(backbone=bb, seq_len=16))
+    critic = build(pair.d_decls, jax.random.key(2), jnp.float32)
+    lm_cfg = critic_lm_config(pair.cfg)
+    lm_params = critic_lm_params(critic)
+    assert "head" not in lm_params and "embed" in lm_params
+
+    eng = DecodeEngine(lm_cfg, lm_params, DecodeSpec(slots=2, max_seq=20))
+    prompt = np.asarray([3, 1, 4, 1, 5], np.int32)
+    toks = eng.generate(0, prompt, 4, request_id=0)
+    assert toks.shape == (4,) and toks.dtype == np.int32
+    np.testing.assert_array_equal(toks, eng.replay(prompt, 4, request_id=0))

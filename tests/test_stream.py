@@ -215,6 +215,46 @@ def test_async_overlap_bounded_staleness_ages():
     assert np.all(r_async.extra["staleness"] == 0)
 
 
+def test_device_stream_matches_host_stream_bitwise():
+    """The device-resident backend through the streaming driver — device-
+    side ages, no D2H fetch before scatter, stall measured on the metrics
+    fetch — is BITWISE the host-backend stream: residency moves where the
+    arrays live, never their values.  Also pins the async pipeline over
+    the device store: with disjoint round_robin cohorts, bounded
+    staleness is exactly the synchronous trajectory (the host-backend
+    twin of test_async_disjoint_cohorts_equals_sync)."""
+    U, C, steps = 6, 2, 9
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.3)
+    reals = np.random.default_rng(0).normal(
+        size=(steps, C, 16, 2)).astype(np.float32)
+    sched = make_schedule("round_robin", U, C, steps,
+                          np.random.default_rng(1))
+    eng = make_cohort_rows_engine(PAIR, fcfg, "approach1")
+    sh0, be_h = init_host_backend(PAIR, fcfg, jax.random.key(0))
+
+    be_d = DeviceStateBackend(be_h.snapshot())
+    assert be_d.device_resident and not be_h.device_resident
+    _, _, last = be_d.gather_rows(np.asarray([0, 1]))
+    assert isinstance(last, jax.Array)  # no host sync in the gather
+
+    runs = {}
+    for name, be, kw in [
+            ("host", be_h, {}),
+            ("device", DeviceStateBackend(be_d.store), {}),
+            ("device_async", DeviceStateBackend(be_d.store),
+             dict(async_rounds=2))]:
+        _, ms, stats = stream_cohort_rounds(eng, sh0, be, sched,
+                                            lambda r: reals[r], **kw)
+        runs[name] = (np.asarray([m["g_loss"] for m in ms]),
+                      np.stack([np.asarray(m["d_loss"]) for m in ms]),
+                      np.asarray(be.snapshot().d_flat),
+                      np.asarray(be.snapshot().last_round))
+        assert all(np.isfinite(s) for s in stats.stall_s)
+    for other in ["device", "device_async"]:
+        for a, b in zip(runs["host"], runs[other]):
+            np.testing.assert_array_equal(a, b)
+
+
 def test_async_rejects_device_backend():
     ds = _ds(2)
     with pytest.raises(ValueError):

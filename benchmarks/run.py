@@ -526,6 +526,165 @@ def paper_stream():
 
 
 # ---------------------------------------------------------------------------
+# Store-resident fused cohort rounds (PR 7 tentpole)
+# ---------------------------------------------------------------------------
+
+def paper_fused_store():
+    """Store-resident fused cohort rounds: gather→train→scatter for a
+    whole K-round window in ONE compiled dispatch.
+
+    Device leg (U=4096, C=8, K=16): ``make_fused_store_engine`` scans the
+    window over the resident (U, N) store with the carry donated, vs the
+    per-round rows engine streamed over a ``DeviceStateBackend`` — K
+    dispatches + K row gathers/scatters + K metric syncs per window.
+    GATED: the fused side must run the whole run (full windows AND the
+    masked remainder) out of ONE compiled program with exactly one engine
+    call per window.  The wall speedup is reported but NOT gated — on
+    this 2-core container the dispatch overhead being removed is real but
+    its wall margin is background-load noisy (same policy as
+    paper_stream's wall number).
+
+    Host leg (host-resident store): windowed superbatch staging — gather
+    the window's rows as one (K, C, N) block, one fused K-round program
+    with write-after-read forwarding for in-window repeats, ONE blocking
+    fetch per window — vs the synchronous per-round stream over the SAME
+    backend.  GATED on the host stall per round (seconds the host spends
+    blocked on the device): superbatch must stall < 0.5x the per-round
+    stream (it collapses ~K-fold: K stalls become 1).  Stall, not wall,
+    for the same load-robustness reason as paper_stream.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.approaches import DistGANConfig
+    from repro.core.engine import (CohortShared, init_cohort_state,
+                                   make_cohort_rows_engine,
+                                   make_fused_store_engine)
+    from repro.core.federated import DeviceStateBackend, make_schedule
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+    from repro.core.protocol import run_distgan
+    from repro.core.session import stream_cohort_rounds
+
+    # --- device leg: dispatch-count contract + wall comparison ---------
+    U, C, K, B = 4096, 8, 16, 32
+    windows = 2 if QUICK else 4
+    steps = K * windows
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                      d_hidden=16))
+    fcfg = DistGANConfig(num_users=U, selection="topk", upload_frac=0.5)
+    sched = make_schedule("uniform", U, C, steps, np.random.default_rng(1))
+    data = np.random.default_rng(SEED).normal(
+        size=(steps, C, B, 2)).astype(np.float32)
+
+    rows_eng = make_cohort_rows_engine(pair, fcfg, "approach1")
+    fs_eng = make_fused_store_engine(pair, fcfg, "approach1")
+    calls = {"rows": 0, "fused": 0}
+
+    def rows_counted(*a):
+        calls["rows"] += 1
+        return rows_eng(*a)
+
+    def fused_counted(*a, **kw):
+        calls["fused"] += 1
+        return fs_eng(*a, **kw)
+
+    def init():
+        cs = init_cohort_state(pair, fcfg, jax.random.key(SEED),
+                               sync_ds=True)
+        return cs, CohortShared(cs.g, cs.g_opt, cs.server_d, cs.step,
+                                cs.key), DeviceStateBackend(cs.store)
+
+    def run_rows(shared, backend, i):
+        shared, _, _ = stream_cohort_rounds(
+            rows_counted, shared, backend, sched[i:i + K],
+            lambda r: data[i + r])
+        return shared
+
+    # every window — full or remainder — passes a (K,) valid mask, so one
+    # compiled program serves them all (valid=None would trace a second,
+    # maskless program)
+    full = jnp.ones((K,), bool)
+
+    def run_fused(cstate, i):
+        cstate, m = fused_counted(cstate, jnp.asarray(data[i:i + K]),
+                                  jnp.asarray(sched[i:i + K]), valid=full)
+        jax.block_until_ready(m["g_loss"])
+        return cstate
+
+    cstate, shared, backend = init()
+    shared = run_rows(shared, backend, 0)       # compile both programs
+    cstate = run_fused(cstate, 0)
+    t_rows = t_fused = float("inf")
+    reps = 2 if QUICK else 3
+    for _ in range(reps):                        # interleaved, best-of
+        for i in range(K, steps, K):
+            t0 = time.perf_counter()
+            shared = run_rows(shared, backend, i)
+            t_rows = min(t_rows, (time.perf_counter() - t0) / K)
+            t0 = time.perf_counter()
+            cstate = run_fused(cstate, i)
+            t_fused = min(t_fused, (time.perf_counter() - t0) / K)
+    n_windows = 1 + reps * (windows - 1)
+    one_dispatch = calls["fused"] == n_windows
+    # a masked remainder window must reuse the SAME compiled program
+    k_rem = 3
+    pad = np.concatenate([sched[:k_rem]] * (K // k_rem + 1))[:K]
+    dpad = np.concatenate([data[:k_rem]] * (K // k_rem + 1))[:K]
+    cstate, _ = fs_eng(cstate, jnp.asarray(dpad), jnp.asarray(pad),
+                       valid=jnp.asarray(np.arange(K) < k_rem))
+    one_program = fs_eng._cache_size() == 1
+
+    emit(f"paper_fused_store/device_rows_U{U}_C{C}", t_rows * 1e6,
+         f"dispatches_per_window={K};rows_roundtrips_per_window={K}")
+    emit(f"paper_fused_store/device_fused_U{U}_C{C}", t_fused * 1e6,
+         f"rounds_per_jit={K};dispatches_per_window=1;"
+         f"programs={fs_eng._cache_size()};store_donated=1")
+    sp = t_rows / t_fused
+    emit("paper_fused_store/device_dispatch_bound", 0.0,
+         f"engine_calls={calls['fused']}/windows={n_windows};"
+         f"one_program_incl_remainder={int(one_program)};wall=x{sp:.2f};"
+         f"pass={int(one_dispatch and one_program)}")
+
+    # --- host leg: superbatch staging vs per-round streaming -----------
+    # dim/width chosen so the per-round D2H fetch + scatter is a visible
+    # share of the round (the regime the superbatch collapses); the
+    # per-round side keeps prefetch=True — it loses ONLY its K-per-window
+    # blocking output fetches, not its data staging overlap
+    pair2 = make_mlp_pair(MLPGanConfig(data_dim=256, z_dim=32,
+                                       g_hidden=256, d_hidden=256))
+    U2, rpj = 1024, 8
+    ds2 = _stream_ds(U2, 256)
+    fcfg2 = DistGANConfig(num_users=U2, selection="topk", upload_frac=0.1)
+    steps2 = 24 if QUICK else 48
+    kw = dict(steps=steps2, batch_size=128, seed=SEED, eval_samples=0,
+              participation="uniform", cohort_size=8, state_backend="host")
+    modes = [("per_round", dict()),
+             ("superbatch", dict(rounds_per_jit=rpj,
+                                 fuse_store_rounds=True))]
+    stall = {name: float("inf") for name, _ in modes}
+    best = {name: float("inf") for name, _ in modes}
+    fused_flag = {}
+    for _ in range(3):                           # interleaved, best-of
+        for name, extra_kw in modes:
+            r = run_distgan(pair2, fcfg2, ds2, "approach1", **kw,
+                            **extra_kw)
+            stall[name] = min(stall[name],
+                              r.extra["host_stall_s_per_round"])
+            best[name] = min(best[name], r.extra["min_step_time_s"])
+            fused_flag[name] = r.extra["fused_store"]
+    for name, _ in modes:
+        emit(f"paper_fused_store/host_{name}", best[name] * 1e6,
+             f"U={U2};C=8;dim=256;host_stall_us={stall[name] * 1e6:.0f};"
+             f"fused_store={int(fused_flag[name])}")
+    ratio = stall["superbatch"] / max(stall["per_round"], 1e-9)
+    sp2 = best["per_round"] / best["superbatch"]
+    emit("paper_fused_store/host_stall_collapse", 0.0,
+         f"stall_super/stall_round=x{ratio:.3f};wall=x{sp2:.2f};"
+         f"rounds_per_jit={rpj};stalls_per_window=1_vs_{rpj};"
+         f"pass={int(ratio < 0.5 and fused_flag['superbatch'])}")
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant generation serving (PR 5 tentpole)
 # ---------------------------------------------------------------------------
 
@@ -620,7 +779,7 @@ def paper_serve():
          f"pad_frac={bat['padded_slots'] / max(bat['dispatched_slots'], 1):.3f}")
     sp = t_naive / t_buck
     emit("paper_serve/serve_speedup", 0.0,
-         f"x{sp:.2f};samples_per_s={total / t_buck:,.0f};"
+         f"x{sp:.2f};floor=x1.5;samples_per_s={total / t_buck:,.0f};"
          f"compile_le_buckets={int(compile_ok)};deterministic={int(det)};"
          f"pass={int(sp >= 1.5 and compile_ok and det)}")
 
@@ -729,7 +888,7 @@ def paper_decode():
          f"mean_occupancy={st.get('mean_occupancy', 0):.2f}")
     sp = t_seq / t_cont
     emit("paper_decode/decode_speedup", 0.0,
-         f"x{sp:.2f};tokens_per_s={total / t_cont:,.0f};"
+         f"x{sp:.2f};floor=x3.0;tokens_per_s={total / t_cont:,.0f};"
          f"programs_bounded={int(prog_ok)};match_sequential={int(seq_ok)};"
          f"replay={int(rep_ok)};mix_invariant={int(mix_ok)};"
          f"pass={int(sp >= 3.0 and prog_ok and seq_ok and rep_ok and mix_ok)}")
@@ -904,6 +1063,7 @@ BENCHES = {
     "paper_collapse": paper_collapse,
     "paper_cohort": paper_cohort,
     "paper_stream": paper_stream,
+    "paper_fused_store": paper_fused_store,
     "paper_serve": paper_serve,
     "paper_decode": paper_decode,
     "paper_bandwidth": paper_bandwidth,
@@ -911,18 +1071,52 @@ BENCHES = {
     "roofline_table": roofline_table,
 }
 
-# --quick smoke gate (<~4 min): fused-engine comparison, kernel micro,
+# --quick smoke gate (<~5 min): fused-engine comparison, kernel micro,
 # the cohort U-independence check, the host-store streaming gates, the
-# serving micro-batching gate, the continuous-batching decode gate, and
-# the (self-seeding) roofline table
+# fused store-resident window gates, the serving micro-batching gate,
+# the continuous-batching decode gate, and the (self-seeding) roofline
+# table.
+#
+# Gate thresholds under --quick are FLOORS calibrated to hold on the
+# weakest CI box (1-2 shared cores), not the margins a full run on a
+# quiet machine shows — e.g. serve_speedup gates at x1.5 although the
+# 2-core box that calibrated it measured x5.9 (a 1-core box, where
+# per-dispatch overhead is much lower, measures x1.9), and
+# decode_speedup gates at x3.0 against typical full-run margins of
+# x5-8.  Each speedup row names its floor in ``_derived``
+# (``floor=x..``) so the artifact is self-describing: a recorded
+# x1.82 next to a x1.5 floor is a pass, not a near-miss of some
+# undocumented full-run target.
 QUICK_BENCHES = ["paper_time", "kernels_micro", "paper_cohort",
-                 "paper_stream", "paper_serve", "paper_decode",
-                 "roofline_table"]
+                 "paper_stream", "paper_fused_store", "paper_serve",
+                 "paper_decode", "roofline_table"]
+
+
+def _env_info() -> dict:
+    """Provenance block for the artifact: a recorded number is only
+    comparable across runs with the runtime/machine context it was
+    measured under (a 1-core CI box and a 16-core workstation disagree
+    x3+ on every dispatch-bound row)."""
+    import jax
+
+    from repro.kernels.ops import _interpret
+
+    dev = jax.devices()[0]
+    return {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": dev.device_kind,
+        "device_count": jax.device_count(),
+        "cpu_count": os.cpu_count(),
+        "kernels_interpret_mode": bool(_interpret()),
+    }
 
 
 def write_bench_json(path: str = BENCH_JSON) -> None:
     """Merge this run's rows into the existing artifact (a subset run —
-    one bench name, or --quick — must not clobber full-run results)."""
+    one bench name, or --quick — must not clobber full-run results).
+    ``_env`` is NOT merged: it describes THIS run's machine/runtime and
+    is overwritten wholesale."""
     payload, derived = {}, {}
     if os.path.exists(path):
         try:
@@ -930,12 +1124,14 @@ def write_bench_json(path: str = BENCH_JSON) -> None:
                 payload = json.load(fh)
             derived = payload.pop("_derived", {})
             payload.pop("_quick", None)
+            payload.pop("_env", None)
         except (json.JSONDecodeError, OSError):
             payload, derived = {}, {}
     payload.update(RESULTS)
     derived.update(DERIVED)
     payload["_derived"] = derived
     payload["_quick"] = QUICK
+    payload["_env"] = _env_info()
     with open(path, "w") as fh:
         json.dump(payload, fh, indent=1, sort_keys=True)
         fh.write("\n")

@@ -176,23 +176,12 @@ def cohort_state_to_full(pair, fcfg: DistGANConfig,
                         cstate.step, cstate.key)
 
 
-def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
-                       adaptive: bool = False) -> Callable:
-    """Scan-fused cohort engine for the host-simulated layout.
-
-    Returns ``chunk(cstate, reals, idx, wts=None, valid=None)`` with
-    ``reals (K, C, B, ...)`` the scheduled cohorts' private batches and
-    ``idx (K, C) int32`` the cohort membership per round.  Per round the
-    body sees ONLY the gathered C rows — the compiled program is shaped by
-    C, while U merely sizes the resident (U, N) buffers (gather/scatter
-    touch C rows; XLA updates the donated store in place).
-
-    ``adaptive=True`` additionally scans ``wts (K, C) f32`` — host-derived
-    participation-adaptive combine weights
-    (core.federated.participation_weights) forwarded to the round body.
-    The flag gates the extra input so the default path traces the EXACT
-    program pinned bitwise against the plain fused engine.
-    """
+def _cohort_round_fn(pair, fcfg: DistGANConfig, approach: str) -> Callable:
+    """One store-resident cohort round: gather the scheduled rows, run the
+    width-C body, scatter the updated rows back (stamping ``last_round``).
+    Shared by ``make_cohort_engine`` and ``make_fused_store_engine`` —
+    the two jits trace the IDENTICAL program and differ only in carry
+    donation."""
     appr = resolve_approach(approach)
     assert appr.user_axis, f"{approach} has no user axis to virtualize"
     body = appr.body_factory(pair, fcfg)
@@ -230,6 +219,28 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
         metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
         return new_carry, metrics
 
+    return round_fn
+
+
+def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
+                       adaptive: bool = False) -> Callable:
+    """Scan-fused cohort engine for the host-simulated layout.
+
+    Returns ``chunk(cstate, reals, idx, wts=None, valid=None)`` with
+    ``reals (K, C, B, ...)`` the scheduled cohorts' private batches and
+    ``idx (K, C) int32`` the cohort membership per round.  Per round the
+    body sees ONLY the gathered C rows — the compiled program is shaped by
+    C, while U merely sizes the resident (U, N) buffers (gather/scatter
+    touch C rows; XLA updates the donated store in place).
+
+    ``adaptive=True`` additionally scans ``wts (K, C) f32`` — host-derived
+    participation-adaptive combine weights
+    (core.federated.participation_weights) forwarded to the round body.
+    The flag gates the extra input so the default path traces the EXACT
+    program pinned bitwise against the plain fused engine.
+    """
+    round_fn = _cohort_round_fn(pair, fcfg, approach)
+
     def chunk(cstate: CohortState, reals, idx, wts=None, valid=None):
         assert (wts is not None) == adaptive, \
             "wts must be supplied iff the engine was built adaptive=True"
@@ -243,6 +254,40 @@ def make_cohort_engine(pair, fcfg: DistGANConfig, approach: str,
     # the non-virtualized engine, breaking the C == U bitwise pin.  The
     # cost is one store copy per CHUNK (amortized over rounds_per_jit).
     return jax.jit(chunk)
+
+
+def make_fused_store_engine(pair, fcfg: DistGANConfig, approach: str,
+                            adaptive: bool = False) -> Callable:
+    """Store-resident fused window engine: ``make_cohort_engine``'s EXACT
+    trace — K gather→train→scatter rounds in one ``lax.scan`` over the
+    resident (U, N) store — with the carry DONATED, so XLA scatters the
+    cohort rows into the store in place.  One dispatch per window, zero
+    host traffic, and no per-chunk (U, N) store copy: at U=4096 the copy
+    is the dominant per-window cost of the non-donated engine, which is
+    kept solely for its C == U bitwise pin against the non-virtualized
+    engine (see the donation note there).
+
+    The caller must treat the passed ``cstate`` as consumed (rebind to
+    the returned carry — ``core.session._drive_chunks`` already does).
+    Trajectory contract (measured, tests/test_fused_store.py): the
+    donated program is deterministic (re-runs are bitwise) and
+    ``last_round`` stamping is exact, but in-place aliasing lets XLA
+    reschedule the update clusters, so values drift from the non-donated
+    engine at ULP — pinned at atol=1e-6 per round, the same contract the
+    per-round rows path carries (an extra optimization_barrier on the
+    store does NOT recover bitwise; probed empirically).
+    """
+    round_fn = _cohort_round_fn(pair, fcfg, approach)
+
+    def chunk(cstate: CohortState, reals, idx, wts=None, valid=None):
+        assert (wts is not None) == adaptive, \
+            "wts must be supplied iff the engine was built adaptive=True"
+        inp = (reals, idx) if wts is None else (reals, idx, wts)
+        if valid is None:
+            return jax.lax.scan(round_fn, cstate, inp)
+        return jax.lax.scan(_masked(round_fn), cstate, (inp, valid))
+
+    return jax.jit(chunk, donate_argnums=(0,))
 
 
 def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
@@ -268,6 +313,58 @@ def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
         carry_specs = CohortState(
             g=rep(cstate.g), g_opt=rep(cstate.g_opt),
             store=CohortStore(PS(), PS(), PS()),
+            server_d=rep(cstate.server_d), step=PS(), key=PS())
+        metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
+                        "kept_frac": PS(), "mean_age": PS()}
+
+        if valid is None:
+            def scanned(st, rs, ix):
+                return jax.lax.scan(round_fn, st, (rs, ix))
+            in_specs = (carry_specs, PS(None, AXIS), PS(None, AXIS))
+            args = (cstate, reals, idx)
+        else:
+            def scanned(st, rs, ix, vs):
+                return jax.lax.scan(_masked(round_fn), st, ((rs, ix), vs))
+            in_specs = (carry_specs, PS(None, AXIS), PS(None, AXIS), PS())
+            args = (cstate, reals, idx, valid)
+
+        fn = shard_map_compat(scanned, mesh, in_specs=in_specs,
+                              out_specs=(carry_specs, metric_specs))
+        return fn(*args)
+
+    return jax.jit(chunk)  # not donated — see make_cohort_engine
+
+
+def make_spmd_fused_store_engine(pair, fcfg: DistGANConfig, mesh,
+                                 approach: str, cohort_size: int):
+    """Store-resident SPMD cohort engine over a mesh-SHARDED store: each
+    of the C mesh slices holds U/C rows of the CohortStore and a round's
+    gather/scatter moves exactly C rows across the axis as bitcast-int32
+    one-hot psums (bit-exact — see ``make_spmd_fused_store_round``).
+    Same signature as ``make_spmd_cohort_engine``; per-device store
+    memory drops from U·N to (U/C)·N, so U scales with the MESH instead
+    of a single device.  Requires ``U % C == 0``.
+    """
+    from jax.sharding import PartitionSpec as PS
+
+    from repro.core.spmd import (AXIS, make_spmd_fused_store_round,
+                                 shard_map_compat)
+
+    axis_size = mesh.shape[AXIS]
+    assert axis_size == cohort_size, (
+        f"cohort must equal the '{AXIS}' mesh axis (C={cohort_size}, "
+        f"axis={axis_size})")
+    round_fn = make_spmd_fused_store_round(pair, fcfg, approach, cohort_size)
+
+    def chunk(cstate: CohortState, reals, idx, valid=None):
+        U = cstate.store.num_users
+        assert U % axis_size == 0, (
+            f"the sharded store needs U % C == 0 (U={U}, C={axis_size}); "
+            f"use make_spmd_cohort_engine (replicated store) otherwise")
+        rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
+        carry_specs = CohortState(
+            g=rep(cstate.g), g_opt=rep(cstate.g_opt),
+            store=CohortStore(PS(AXIS), PS(AXIS), PS(AXIS)),
             server_d=rep(cstate.server_d), step=PS(), key=PS())
         metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
                         "kept_frac": PS(), "mean_age": PS()}
@@ -366,6 +463,100 @@ def make_cohort_rows_engine(pair, fcfg: DistGANConfig,
     # carry — see make_cohort_engine).  The per-round copy is one G/opt/
     # server-D tree, amortized noise next to the round's compute.
     return jax.jit(round_fn, donate_argnums=(1, 2))
+
+
+def make_superbatch_engine(pair, fcfg: DistGANConfig, approach: str,
+                           adaptive: bool = False) -> Callable:
+    """Windowed superbatch engine for host-resident stores: a whole
+    K-round window over ONE staged row block, dispatched once.
+
+    The per-round rows engine pays a host gather, a dispatch, and a
+    blocking scatter-back per round.  Here the driver gathers the
+    window's scheduled rows as a ``(K, C, N)`` block in one host pass and
+    this engine scans the K rounds over it IN-PROGRAM, so the host stalls
+    once per window instead of once per round.
+
+    Returns ``window(shared, blk_d, blk_o, fwd, ages, real, wts=None,
+    valid=None) -> (shared, blk_d, blk_o, metrics)``:
+
+    * ``blk_d (K, C, Nd)`` / ``blk_o (K, C, No)`` — the scheduled rows,
+      gathered host-side BEFORE the window ran (stale for users that
+      repeat inside the window).  Donated; row r is overwritten with
+      round r's updated rows, so the returned block is what the host
+      scatters back — in round order, last-writer-wins.
+    * ``fwd (K, C) int32`` — write-after-read forwarding plan
+      (``core.federated.window_forwarding``): -1 reads the staged row,
+      else the flat ``r'*C + c'`` position of the SAME user's most recent
+      in-window write, whose updated bytes round r reads instead.  The
+      forwarding select is exact (``jnp.where``), so a forwarded row is
+      bitwise the row the per-round path would have scattered to the
+      host and regathered.
+    * ``ages (K, C) int32`` — participation ages, exact under forwarding
+      (host-computed from the pre-window ``last_round`` plus in-window
+      stamps; a user repeating r' -> r carries age r - r' - 1).
+    * ``valid (K,) bool`` — masks padded rounds of a remainder window
+      (their block rows are never written), so every window size compiles
+      ONE program, exactly as ``run_scanned`` does for data chunks.
+
+    Per round the program between the optimization barriers is the
+    per-round rows engine's body verbatim; the pin against the streamed
+    per-round path is established in tests/test_fused_store.py.
+    """
+    appr = resolve_approach(approach)
+    assert appr.user_axis, f"{approach} has no user axis to virtualize"
+    body = appr.body_factory(pair, fcfg)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(carry, inp):
+        shared, blk_d, blk_o = carry
+        r, fwd, ages, real, *rest = inp
+        w = rest[0] if rest else None
+        C = fwd.shape[0]
+        # one gather serves both sources: a non-forwarded member reads its
+        # own staged row r*C + c (untouched — earlier rounds only wrote
+        # their OWN rows), a forwarded member reads the flat position of
+        # its last in-window write, which already holds updated bytes
+        src = jnp.where(fwd >= 0, fwd,
+                        r * C + jnp.arange(C, dtype=jnp.int32))
+        d_rows = blk_d.reshape(-1, blk_d.shape[-1])[src]
+        o_rows = blk_o.reshape(-1, blk_o.shape[-1])[src]
+        ds = d_layout.unflatten_stacked(d_rows)
+        opts = o_layout.unflatten_stacked(o_rows)
+        ds, opts = jax.lax.optimization_barrier((ds, opts))
+        state = DistGANState(shared.g, shared.g_opt, ds, opts,
+                             shared.server_d, shared.step, shared.key)
+        new_state, metrics = body(state, real, ages, w)
+        nds, nopts = jax.lax.optimization_barrier(
+            (new_state.ds, new_state.d_opts))
+        new_shared = CohortShared(new_state.g, new_state.g_opt,
+                                  new_state.server_d, new_state.step,
+                                  new_state.key)
+        blk_d = blk_d.at[r].set(d_layout.flatten_stacked(nds))
+        blk_o = blk_o.at[r].set(o_layout.flatten_stacked(nopts))
+        metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
+        return (new_shared, blk_d, blk_o), metrics
+
+    def window(shared, blk_d, blk_o, fwd, ages, real, wts=None, valid=None):
+        assert (wts is not None) == adaptive, \
+            "wts must be supplied iff the engine was built adaptive=True"
+        k = blk_d.shape[0]
+        r_idx = jnp.arange(k, dtype=jnp.int32)
+        xs = (r_idx, fwd, ages, real)
+        if wts is not None:
+            xs = xs + (wts,)
+        carry = (shared, blk_d, blk_o)
+        if valid is None:
+            carry, metrics = jax.lax.scan(round_fn, carry, xs)
+        else:
+            carry, metrics = jax.lax.scan(_masked(round_fn), carry,
+                                          (xs, valid))
+        shared, blk_d, blk_o = carry
+        return shared, blk_d, blk_o, metrics
+
+    # the row blocks are per-window transfers (donated, updated in
+    # place); the shared carry is NOT donated — see make_cohort_rows_engine
+    return jax.jit(window, donate_argnums=(1, 2))
 
 
 def init_host_backend(pair, fcfg: DistGANConfig, key, *,

@@ -26,7 +26,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Literal, NamedTuple
+from typing import Any, Callable, Literal, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -357,6 +357,71 @@ def make_schedule(participation: str, num_users: int, cohort: int,
         rng, num_users, cohort, rounds, shard_sizes, start=start)
     assert sched.shape == (rounds, cohort)
     return sched
+
+
+def make_schedule_source(participation: str, num_users: int, cohort: int,
+                         shard_sizes=None) -> Callable:
+    """Bind a scheduler's static parameters once; returns
+    ``schedule_window(rng, start, K) -> (K, C) int32``.
+
+    Every schedule consumer (the session's ``_next_schedule``, the
+    store-resident fused engines, the fused-store bench) used to re-spell
+    the same ``make_schedule(participation, num_users, cohort, ...)``
+    call with its static arguments re-derived at each site; this factory
+    is the ONE place that binding happens.  The returned window function
+    keeps ``make_schedule``'s resume contract: rng-driven schedulers
+    consume their stream sequentially, so windows generated at
+    ``start=0, K`` then ``start=K, K'`` concatenate to the single-shot
+    ``start=0, K+K'`` schedule exactly."""
+
+    def schedule_window(rng: np.random.Generator, start: int,
+                        rounds: int) -> np.ndarray:
+        return make_schedule(participation, num_users, cohort, rounds, rng,
+                             shard_sizes, start=start)
+
+    return schedule_window
+
+
+def window_forwarding(schedule: np.ndarray, last_round: np.ndarray,
+                      round_base: int):
+    """Host-side precompute for the fused K-round superbatch program:
+    write-after-read forwarding indices and exact participation ages for
+    one ``(K, C)`` schedule window.
+
+    A user scheduled twice inside one fused window must see its own
+    earlier update in the later round — but the staged ``(K, C, N)`` row
+    block was gathered from the store BEFORE the window ran, so the later
+    round's staged row is stale.  ``fwd[r, c]`` is the flat position
+    ``r' * C + c'`` of user ``schedule[r, c]``'s most recent EARLIER
+    occurrence within the window (the row the fused program must read
+    from its output block instead of the staged input), or -1 when the
+    staged row is current.  Rows within a round are replacement-free
+    (make_schedule), so a forward source is always from a strictly
+    earlier round — the scan reads only already-written output rows.
+
+    ``ages[r, c]`` is the exact age the per-round path would compute,
+    including in-window re-participation: a member drawn again sees
+    ``last_round == round_base + r' + 1`` (the re-zeroed age convention),
+    so its age is ``r - r' - 1``.  ``last_round`` is NOT mutated.
+
+    Returns ``(fwd (K, C) int32, ages (K, C) int32)``."""
+    K, C = schedule.shape
+    fwd = np.full((K, C), -1, np.int32)
+    ages = np.empty((K, C), np.int32)
+    seen: dict = {}          # user -> (flat position, stamped last_round)
+    for r in range(K):
+        for c in range(C):
+            u = int(schedule[r, c])
+            if u in seen:
+                pos, stamp = seen[u]
+                fwd[r, c] = pos
+                ages[r, c] = round_base + r - stamp
+            else:
+                ages[r, c] = round_base + r - int(last_round[u])
+        for c in range(C):
+            u = int(schedule[r, c])
+            seen[u] = (r * C + c, round_base + r + 1)
+    return fwd, ages
 
 
 def participation_weights(schedule: np.ndarray, num_users: int, *,

@@ -46,6 +46,7 @@ def run_distgan(
     sample_fn: Callable | None = None,
     engine: str = "fused",
     rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT,
+    fuse_store_rounds: bool = False,
     participation: str = "full",
     cohort_size: int | None = None,
     state_backend: str = "device",
@@ -75,10 +76,14 @@ def run_distgan(
     Kwarg semantics (validated by the spec layer, which raises
     ``ValueError``/``KeyError`` on conflicts or unknown registry keys):
 
-    * ``engine`` / ``rounds_per_jit`` → :class:`EngineSpec` — ``fused``
-      scan-compiles K rounds per XLA dispatch (padded+masked remainder
-      chunks share ONE program); ``per_step`` is the legacy jit loop;
-      both produce bit-identical trajectories (tests/test_engine.py).
+    * ``engine`` / ``rounds_per_jit`` / ``fuse_store_rounds`` →
+      :class:`EngineSpec` — ``fused`` scan-compiles K rounds per XLA
+      dispatch (padded+masked remainder chunks share ONE program);
+      ``per_step`` is the legacy jit loop; both produce bit-identical
+      trajectories (tests/test_engine.py).  ``fuse_store_rounds`` moves
+      the cohort gather→train→scatter loop itself into the compiled
+      window (store-resident on the device backend, superbatch-staged on
+      the host backend; see tests/test_fused_store.py).
     * ``participation`` / ``cohort_size`` → :class:`ParticipationSpec` —
       cohort virtualization: ``fcfg.num_users`` LOGICAL users, a
       compiled program shaped by C alone.
@@ -136,7 +141,8 @@ def run_distgan(
         batch_size=batch_size,
         seed=seed,
         eval_samples=eval_samples,
-        engine=EngineSpec(kind=engine, rounds_per_jit=rounds_per_jit),
+        engine=EngineSpec(kind=engine, rounds_per_jit=rounds_per_jit,
+                          fuse_store_rounds=fuse_store_rounds),
         participation=ParticipationSpec(scheduler=participation,
                                         cohort_size=cohort_size),
         backend=BackendSpec(kind=state_backend, async_rounds=async_rounds,

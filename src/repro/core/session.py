@@ -56,9 +56,12 @@ from repro.core.approaches import (DistGANConfig, d_flat_layout,
 from repro.core.engine import (CohortShared, CohortState, _pad_to,
                                cohort_state_to_full, init_cohort_state,
                                init_host_backend, make_cohort_engine,
-                               make_cohort_rows_engine, make_engine)
-from repro.core.federated import (make_schedule, participation_weights,
-                                  upload_bytes_flat)
+                               make_cohort_rows_engine, make_engine,
+                               make_fused_store_engine,
+                               make_superbatch_engine)
+from repro.core.federated import (make_schedule_source,
+                                  participation_weights, upload_bytes_flat,
+                                  window_forwarding)
 from repro.core.spec import (FederationSpec, register_backend,
                              resolve_approach, resolve_backend)
 
@@ -320,6 +323,91 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
     return shared, metrics_out, stats
 
 
+class SuperbatchStats(typing.NamedTuple):
+    win_retire_t: list   # perf_counter stamp when window w's scatter landed
+    win_stall_s: list    # host seconds blocked on the device for window w
+    win_rounds: list     # real (unpadded) rounds in window w
+
+
+def superbatch_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
+                             batch_fn: Callable, *, rounds_per_jit: int,
+                             wts: np.ndarray | None = None,
+                             round_base: int = 0, prefetch: bool = True):
+    """Windowed superbatch driver over a ``make_superbatch_engine``.
+
+    Where ``stream_cohort_rounds`` pays a host gather, a dispatch, and a
+    blocking scatter-back PER ROUND, this driver handles a whole
+    ``rounds_per_jit`` window per iteration: gather the window's
+    scheduled rows as one ``(K, C, N)`` block, compute the
+    write-after-read forwarding plan for users repeating inside the
+    window (``core.federated.window_forwarding`` — ages exact), dispatch
+    the fused K-round program ONCE, and block a single time on the
+    returned block before scattering it back in round order
+    (last-writer-wins; ``last_round`` stamped per real round).  K host
+    stalls per window become 1 — PR 3's double-buffering extended to
+    window granularity: while the device runs window w, the host samples
+    window w+1's batches (``prefetch``); only the ROW gather for w+1
+    must wait for w's scatter.
+
+    Every window — the trailing remainder included — is padded to
+    ``rounds_per_jit`` with masked rounds, so any steps count and any
+    session windowing reuse ONE compiled program; a repeat that spans a
+    window boundary reads the scattered bytes from the host instead of
+    the in-program forward, which are the same bytes (the forwarding
+    select is exact), so trajectories stay invariant to windowing.
+
+    Returns ``(shared, metrics, stats)`` like ``stream_cohort_rounds``
+    but with per-WINDOW :class:`SuperbatchStats` (the stall is the
+    single block on the window's output rows — the gated figure of
+    merit in benchmarks ``paper_fused_store``).
+    """
+    steps = len(schedule)
+    rpj = rounds_per_jit
+    metrics_out: list = [None] * steps
+    stats = SuperbatchStats([], [], [])
+    data = None
+    i = 0
+    while i < steps:
+        k = min(rpj, steps - i)
+        s_pad = _pad_to(np.asarray(schedule[i:i + k]), rpj)
+        # forwarding/ages need the CURRENT last_round — every prior
+        # window's scatter has landed (the one inter-window sync point)
+        fwd, ages = window_forwarding(s_pad, backend.last_round,
+                                      round_base + i)
+        rows = [backend.gather_rows(schedule[i + r]) for r in range(k)]
+        d_blk = _pad_to(np.stack([np.asarray(r_[0]) for r_ in rows]), rpj)
+        o_blk = _pad_to(np.stack([np.asarray(r_[1]) for r_ in rows]), rpj)
+        if data is None:
+            data = _chunk_stack(batch_fn, i, k, rpj)
+        w = None
+        if wts is not None:
+            w = jnp.asarray(_pad_to(np.asarray(wts[i:i + k], np.float32),
+                                    rpj))
+        shared, out_d, out_o, m = eng(
+            shared, jax.device_put(d_blk), jax.device_put(o_blk),
+            jnp.asarray(fwd), jnp.asarray(ages), data, w,
+            _valid_mask(k, rpj))
+        # sample the NEXT window's batches while this one computes (rng
+        # order stays strictly sequential, so trajectories are
+        # prefetch-neutral exactly as in the per-round stream)
+        data = None
+        if prefetch and i + k < steps:
+            kn = min(rpj, steps - i - k)
+            data = _chunk_stack(batch_fn, i + k, kn, rpj)
+        t0 = time.perf_counter()
+        out_d, out_o = np.asarray(out_d), np.asarray(out_o)  # THE stall
+        stats.win_stall_s.append(time.perf_counter() - t0)
+        mets = jax.tree.map(np.asarray, m)
+        for r in range(k):
+            backend.scatter_rows(s_pad[r], out_d[r], out_o[r],
+                                 round_base + i + r + 1)
+            metrics_out[i + r] = jax.tree.map(lambda x: x[r], mets)
+        stats.win_retire_t.append(time.perf_counter())
+        stats.win_rounds.append(k)
+        i += k
+    return shared, metrics_out, stats
+
+
 # ---------------------------------------------------------------------------
 # Backend drivers
 # ---------------------------------------------------------------------------
@@ -386,9 +474,15 @@ class DeviceBackendDriver(BackendDriver):
         pair, fcfg, sp = sess.pair, sess.fcfg, sess.spec
         if sess.cohort_virtual:
             self.mode = "cohort"
-            self.eng = make_cohort_engine(
-                pair, fcfg, sp.approach,
-                adaptive=sp.combine.adaptive_server_scale)
+            # fuse_store_rounds: same trace, donated carry — the (U, N)
+            # store updates in place across the window instead of being
+            # copied once per chunk (see make_fused_store_engine for the
+            # ULP contract that donation trades for)
+            self.fused_store = sp.engine.fuse_store_rounds
+            mk = (make_fused_store_engine if self.fused_store
+                  else make_cohort_engine)
+            self.eng = mk(pair, fcfg, sp.approach,
+                          adaptive=sp.combine.adaptive_server_scale)
         elif sp.engine.kind == "fused":
             self.mode = "fused"
             self.eng = make_engine(pair, fcfg, sp.approach)
@@ -639,6 +733,7 @@ class DeviceBackendDriver(BackendDriver):
                    "staleness": staleness,
                    "mean_age": mean_age,
                    "state_backend": "device",
+                   "fused_store": self.fused_store,
                    "adaptive_server_scale":
                        sess.spec.combine.adaptive_server_scale,
                    **({"participation_weights": wts}
@@ -671,6 +766,20 @@ class HostStreamDriver(BackendDriver):
                 pair, fcfg, jax.random.key(sp.seed),
                 sync_ds=sess.approach.sync_ds)
         self.eng = self._make_engine()
+        # store-resident fusion request: legal only for the synchronous
+        # host stream.  Async bounded staleness is inherently per-round
+        # (an in-flight scatter would invalidate a window's pre-gathered
+        # rows) and the spmd driver maps each round's rows onto the mesh
+        # — both FALL BACK to the per-round stream and report
+        # extra["fused_store"] = False.
+        self.fused_store = (sp.engine.fuse_store_rounds
+                            and self.backend_name == "host"
+                            and sp.backend.async_rounds == 0)
+        self.win_eng = None
+        if self.fused_store:
+            self.win_eng = make_superbatch_engine(
+                pair, fcfg, sp.approach,
+                adaptive=sp.combine.adaptive_server_scale)
 
     def _make_engine(self):
         return make_cohort_rows_engine(self.sess.pair, self.sess.fcfg,
@@ -746,22 +855,55 @@ class HostStreamDriver(BackendDriver):
                 for u in schedule[r]])
 
         t0 = time.perf_counter()
-        self.shared, mets, stats = stream_cohort_rounds(
-            self.eng, self.shared, self.backend, schedule, batch_round,
-            async_rounds=sp.backend.async_rounds,
-            prefetch=sp.backend.prefetch, wts=wts, round_base=sess.round)
+        if self.fused_store:
+            rpj = sp.engine.rounds_per_jit
+            self.shared, mets, wstats = superbatch_cohort_rounds(
+                self.win_eng, self.shared, self.backend, schedule,
+                batch_round, rounds_per_jit=rpj, wts=wts,
+                round_base=sess.round, prefetch=sp.backend.prefetch)
+            # timing at window granularity: the first window carries the
+            # compile, full post-warmup windows give the steady rate, and
+            # the per-round stall is the window's single block divided by
+            # its real rounds
+            wr = wstats.win_retire_t
+            compile_s = wr[0] - t0
+            steady = wr[-1] - wr[0] if len(wr) > 1 else 0.0
+            step_denom = max(rounds - wstats.win_rounds[0], 1)
+            rates = [(wr[j] - wr[j - 1]) / wstats.win_rounds[j]
+                     for j in range(1, len(wr))
+                     if wstats.win_rounds[j] == rpj]
+            min_step_s = min(rates) if rates else steady / step_denom
+            post = [s / k for s, k in zip(wstats.win_stall_s[1:],
+                                          wstats.win_rounds[1:])]
+            host_stall = (float(np.mean(post)) if post
+                          else wstats.win_stall_s[0] / wstats.win_rounds[0])
+        else:
+            self.shared, mets, stats = stream_cohort_rounds(
+                self.eng, self.shared, self.backend, schedule, batch_round,
+                async_rounds=sp.backend.async_rounds,
+                prefetch=sp.backend.prefetch, wts=wts,
+                round_base=sess.round)
 
-        retire_t = stats.retire_t
-        compile_s = retire_t[0] - t0
-        steady = retire_t[-1] - retire_t[0] if rounds > 1 else 0.0
-        step_denom = max(rounds - 1, 1)
-        # steady-state per-round estimate: min over sliding windows of
-        # retire stamps (robust to the compile round and background-load
-        # spikes)
-        W = max(1, min(8, (rounds - 1) // 2))
-        rates = [(retire_t[i + W] - retire_t[i]) / W
-                 for i in range(1, rounds - W)]
-        min_step_s = min(rates) if rates else steady / step_denom
+            retire_t = stats.retire_t
+            compile_s = retire_t[0] - t0
+            steady = retire_t[-1] - retire_t[0] if rounds > 1 else 0.0
+            step_denom = max(rounds - 1, 1)
+            # steady-state per-round estimate: min over sliding windows
+            # of retire stamps (robust to the compile round and
+            # background-load spikes)
+            W = max(1, min(8, (rounds - 1) // 2))
+            rates = [(retire_t[i + W] - retire_t[i]) / W
+                     for i in range(1, rounds - W)]
+            min_step_s = min(rates) if rates else steady / step_denom
+            # mean host-blocked-on-device seconds per steady round: the
+            # pipeline's figure of merit.  The compile round AND the
+            # end-of-run drain (the final async_rounds retires block on
+            # still-running rounds by construction) are excluded — with
+            # them, an async run's "steady" stall would just be
+            # drain/steps and shrink with run length
+            host_stall = (float(np.mean(
+                stats.stall_s[1:max(rounds - sp.backend.async_rounds, 2)]))
+                if rounds > 1 else 0.0)
 
         g_losses = np.asarray([float(m["g_loss"]) for m in mets])
         d_losses = np.stack([np.asarray(m["d_loss"]) for m in mets])
@@ -803,16 +945,8 @@ class HostStreamDriver(BackendDriver):
                    "host_backend": self.backend,
                    "async_rounds": async_rounds,
                    "prefetch": sp.backend.prefetch,
-                   # mean host-blocked-on-device seconds per steady
-                   # round: the pipeline's figure of merit.  The compile
-                   # round AND the end-of-run drain (the final
-                   # async_rounds retires block on still-running rounds
-                   # by construction) are excluded — with them, an async
-                   # run's "steady" stall would just be drain/steps and
-                   # shrink with run length
-                   "host_stall_s_per_round": float(np.mean(
-                       stats.stall_s[1:max(rounds - async_rounds, 2)]))
-                   if rounds > 1 else 0.0,
+                   "fused_store": self.fused_store,
+                   "host_stall_s_per_round": host_stall,
                    "adaptive_server_scale":
                        sp.combine.adaptive_server_scale,
                    **({"participation_weights": wts}
@@ -864,6 +998,15 @@ class FederationSession:
         # trajectory is therefore bit-identical to the plain fused
         # engine (pinned in tests/test_engine.py)
         self.sched_rng = np.random.default_rng([spec.seed, 0x5EED])
+        # the scheduler's static parameters, bound ONCE (dedup: every
+        # schedule consumer goes through this source — see
+        # core.federated.make_schedule_source)
+        shard_sizes = None
+        if dataset is not None and isinstance(dataset.meta, dict):
+            shard_sizes = dataset.meta.get("shard_sizes")
+        self._schedule_window = make_schedule_source(
+            spec.participation.scheduler, fcfg.num_users,
+            spec.cohort_size_for(fcfg.num_users), shard_sizes)
         self._part_counts = (np.zeros(fcfg.num_users, np.float64)
                              if spec.combine.adaptive_server_scale else None)
         self._probe_nbytes: int | None = None
@@ -925,12 +1068,7 @@ class FederationSession:
         drawn from the persisted scheduler rng at the session's global
         round offset — window-by-window generation reproduces the
         single-shot full-run schedule exactly."""
-        shard_sizes = None
-        if isinstance(self.dataset.meta, dict):
-            shard_sizes = self.dataset.meta.get("shard_sizes")
-        return make_schedule(self.spec.participation.scheduler,
-                             self.fcfg.num_users, self.cohort_size, rounds,
-                             self.sched_rng, shard_sizes, start=self.round)
+        return self._schedule_window(self.sched_rng, self.round, rounds)
 
     def _next_weights(self, schedule) -> np.ndarray | None:
         if self._part_counts is None:

@@ -210,6 +210,16 @@ class EngineSpec:
 
     kind: str = "fused"
     rounds_per_jit: int = DEFAULT_ROUNDS_PER_JIT
+    # Store-resident fused rounds: run the whole gather->train->scatter
+    # loop for a rounds_per_jit window INSIDE the compiled program.  On
+    # the device backend the (U, N) store is a donated scan carry (one
+    # dispatch per window, zero host traffic); on the host backend the
+    # window's (K, C, N) row block is staged in one pass and the fused
+    # program forwards in-window repeat writes (K host stalls -> 1).
+    # Backends that cannot fuse (spmd streaming, async_rounds > 0 —
+    # bounded staleness is inherently per-round) FALL BACK to the
+    # per-round rows path and report extra["fused_store"] = False.
+    fuse_store_rounds: bool = False
 
     def __post_init__(self):
         if self.kind not in _ENGINE_KINDS:
@@ -219,6 +229,12 @@ class EngineSpec:
             raise ValueError(
                 f"rounds_per_jit must be a positive int, got "
                 f"{self.rounds_per_jit!r}")
+        if self.fuse_store_rounds and self.kind != "fused":
+            raise ValueError(
+                "fuse_store_rounds compiles whole gather->train->scatter "
+                "windows and therefore needs the scan-fused engine "
+                "(kind='fused'); the per_step loop dispatches per round "
+                "by construction")
 
 
 @dataclasses.dataclass(frozen=True)

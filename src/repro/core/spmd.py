@@ -294,6 +294,95 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
     return round_fn
 
 
+def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
+                                cohort_size: int):
+    """Per-round cohort function over a mesh-SHARDED CohortStore, as run
+    INSIDE shard_map.  Where ``make_spmd_cohort_round`` replicates the
+    whole (U, N) store on every device (per-device memory bounds U), here
+    each of the C mesh slices holds a contiguous U/C-row block and a
+    round moves exactly C rows across the axis:
+
+    * gather — every shard contributes the scheduled rows IT owns to a
+      one-hot cross-shard psum and slices out its own member's row.  The
+      f32 row payloads ride the psum as bitcast int32, so the fold is a
+      bit-exact select (a float psum would turn an owned -0.0 into +0.0
+      against the zero contributions of the other shards);
+    * scatter — each shard broadcasts its updated row the same way, then
+      writes the rows it owns back into its local block with a dropped
+      out-of-range index for rows owned elsewhere.
+
+    Requires ``U % C == 0`` (the store must shard evenly).  Cohort rows
+    are replacement-free per round (core.federated.make_schedule), so
+    local writes never collide.  Scan-able:
+    ``repro.core.engine.make_spmd_fused_store_engine`` rolls K of these
+    into one program — the store stays device-resident AND sharded for
+    the whole window.
+    """
+    from repro.core.engine import CohortState
+
+    inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
+    d_layout = d_flat_layout(pair)
+    o_layout = d_opt_flat_layout(pair, fcfg)
+
+    def round_fn(carry: CohortState, inp):
+        real, idx = inp            # per-shard blocks: (1, B, ...), (1,)
+        store = carry.store        # LOCAL block: (Ul, Nd)/(Ul, No)/(Ul,)
+        Ul = store.d_flat.shape[0]
+        me = jax.lax.axis_index(AXIS)
+        all_u = jax.lax.all_gather(idx[0], AXIS)     # (C,) scheduled users
+        own = (all_u // Ul) == me                    # mine to serve/write
+        loc = jnp.where(own, all_u % Ul, 0)
+
+        def gather(local, f32):
+            buf = (jax.lax.bitcast_convert_type(local, jnp.int32)
+                   if f32 else local)
+            mask = own[:, None] if buf.ndim == 2 else own
+            rows = jax.lax.psum(jnp.where(mask, buf[loc], 0), AXIS)
+            return (jax.lax.bitcast_convert_type(rows, jnp.float32)
+                    if f32 else rows)
+
+        rows_d = gather(store.d_flat, True)          # (C, Nd) replicated
+        rows_o = gather(store.opt_flat, True)
+        last = gather(store.last_round, False)       # (C,)
+        age = carry.step - last[me]
+        state = DistGANState(
+            carry.g, carry.g_opt,
+            _restack(d_layout.unflatten(rows_d[me])),
+            _restack(o_layout.unflatten(rows_o[me])),
+            carry.server_d, carry.step, carry.key)
+        new_state, metrics = inner(state, real, age)
+
+        new_d = d_layout.flatten(_unstack(new_state.ds))
+        new_o = o_layout.flatten(_unstack(new_state.d_opts))
+        C = all_u.shape[0]
+
+        def bcast(row, f32):
+            buf = (jax.lax.bitcast_convert_type(row, jnp.int32)
+                   if f32 else row)
+            contrib = jnp.zeros((C,) + buf.shape, buf.dtype).at[me].set(buf)
+            out = jax.lax.psum(contrib, AXIS)
+            return (jax.lax.bitcast_convert_type(out, jnp.float32)
+                    if f32 else out)
+
+        all_nd = bcast(new_d, True)                  # (C, Nd) replicated
+        all_no = bcast(new_o, True)
+        sel = jnp.where(own, loc, Ul)     # Ul is out of range -> dropped
+        new_store = CohortStore(
+            d_flat=store.d_flat.at[sel].set(all_nd, mode="drop"),
+            opt_flat=store.opt_flat.at[sel].set(all_no, mode="drop"),
+            # same re-zeroed age convention as make_spmd_cohort_round
+            last_round=store.last_round.at[sel].set(carry.step + 1,
+                                                    mode="drop"))
+        new_carry = CohortState(new_state.g, new_state.g_opt, new_store,
+                                new_state.server_d, new_state.step,
+                                new_state.key)
+        metrics = dict(metrics, mean_age=jax.lax.psum(
+            age.astype(jnp.float32), AXIS) / jnp.float32(cohort_size))
+        return new_carry, metrics
+
+    return round_fn
+
+
 def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
                                  approach: str, cohort_size: int):
     """Host-backend feed for the mesh-mapped cohort engine: the scheduled

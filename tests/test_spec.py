@@ -128,6 +128,9 @@ def test_spec_field_validation():
         CombineSpec(combiner="staleness_mean", staleness_decay=0.0)
     with pytest.raises(ValueError, match="batch_size"):
         FederationSpec(approach="approach1", batch_size=0)
+    # fused store rounds compile whole windows -> scan-fused engine only
+    with pytest.raises(ValueError, match="fuse_store_rounds"):
+        EngineSpec(kind="per_step", fuse_store_rounds=True)
 
 
 def test_spec_cross_validation():
@@ -174,7 +177,8 @@ def test_spec_cross_validation():
 def test_spec_dict_json_roundtrip():
     spec = FederationSpec(
         approach="download_first", batch_size=32, seed=7, eval_samples=128,
-        engine=EngineSpec(kind="fused", rounds_per_jit=8),
+        engine=EngineSpec(kind="fused", rounds_per_jit=8,
+                          fuse_store_rounds=True),
         participation=ParticipationSpec("weighted", cohort_size=4),
         backend=BackendSpec("host", async_rounds=2, prefetch=False,
                             materialize_state=False),

@@ -1,6 +1,8 @@
-"""Regenerate the EXPERIMENTS.md tables from the dry-run artifacts.
+"""Regenerate the EXPERIMENTS.md tables from the dry-run artifacts and
+the benchmark artifact (BENCH_distgan.json), including its ``_env``
+provenance block and the per-row compression column.
 
-  PYTHONPATH=src python -m benchmarks.make_tables [--tag roofline]
+  PYTHONPATH=src python -m benchmarks.make_tables [--which all]
 """
 
 import argparse
@@ -9,6 +11,8 @@ import json
 import os
 
 ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_distgan.json")
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCHS = ["mamba2-780m", "seamless-m4t-medium", "recurrentgemma-9b",
@@ -77,10 +81,73 @@ def dryrun_md(mesh):
     return "\n".join(lines)
 
 
+def _parse_derived(derived: str) -> dict:
+    """``k=v;k=v`` derived strings -> dict (non-kv fragments are kept
+    under their own text so nothing is silently dropped)."""
+    out = {}
+    for frag in str(derived).split(";"):
+        if "=" in frag:
+            k, _, v = frag.partition("=")
+            out[k] = v
+        elif frag:
+            out[frag] = ""
+    return out
+
+
+def env_md(payload) -> str:
+    """Provenance block: a recorded number is only comparable across
+    runs with the machine/runtime context it was measured under, so the
+    ``_env`` side-channel renders instead of being dropped."""
+    env = payload.get("_env")
+    if not env:
+        return "(no _env block in artifact — re-run benchmarks.run)"
+    quick = payload.get("_quick", False)
+    lines = [f"- `{k}`: {env[k]}" for k in sorted(env)]
+    lines.append(f"- `quick_mode`: {quick}")
+    return "\n".join(lines)
+
+
+def bench_md(payload) -> str:
+    """BENCH_distgan.json rows -> markdown, with the compression column
+    (codec + error-feedback flag from each row's derived string) and the
+    remaining derived keys rendered instead of discarded."""
+    derived = payload.get("_derived", {})
+    names = sorted(k for k in payload if not k.startswith("_"))
+    lines = [
+        "| bench | us/call | compression | derived |",
+        "|---|---|---|---|",
+    ]
+    for name in names:
+        kv = _parse_derived(derived.get(name, ""))
+        codec = kv.pop("codec", None)
+        ef = kv.pop("ef", None)
+        if codec is None:
+            comp = "-"
+        else:
+            comp = codec if ef is None else f"{codec} (ef={ef})"
+        rest = ";".join(f"{k}={v}" if v else k for k, v in kv.items())
+        lines.append(f"| {name} | {payload[name]} | {comp} | {rest} |")
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all")
     args = ap.parse_args()
+    if args.which in ("all", "bench"):
+        print("## Benchmark artifact (BENCH_distgan.json)\n")
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as fh:
+                payload = json.load(fh)
+            print("### Environment provenance\n")
+            print(env_md(payload))
+            print("\n### Rows\n")
+            print(bench_md(payload))
+        else:
+            print("(no BENCH_distgan.json — run benchmarks.run first)")
+        print()
+        if args.which == "bench":
+            return
     print("## Roofline (single-pod 16x16, extrapolated-depth artifacts)\n")
     print(roofline_md())
     print("\n## Dry-run pod16x16 (scan-mode compile proof)\n")

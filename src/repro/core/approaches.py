@@ -39,7 +39,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import losses
-from repro.core.federated import make_flat_layout, select_delta_flat
+from repro.core.federated import (codec_transport, make_flat_layout,
+                                  select_delta_flat)
 from repro.core.spec import register_approach, resolve_combiner
 from repro.optim import adamw, apply_updates
 
@@ -69,6 +70,10 @@ class DistGANConfig:
     use_topk_kernel: bool = True  # Pallas global-threshold top-k (exact)
     loss_type: str = "bce"     # bce (paper) | wgan (beyond-paper, ref [1])
     wgan_clip: float = 0.05    # weight-clip for the W-GAN critic
+    codec: str = "none"        # upload wire codec (spec.CODECS)
+    error_feedback: bool = True   # EF-SGD residual for lossy codecs
+    codec_stochastic: bool = False  # stochastic rounding (int8 codecs)
+    stage_rows: bool = False   # quantize state rows crossing host/mesh
 
 
 def _opts(fcfg: DistGANConfig):
@@ -171,15 +176,31 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
     d_update = _d_update_fn(pair, d_opt_def, fcfg)
     combiner = resolve_combiner(fcfg.combiner)
     layout = d_flat_layout(pair)
+    # transport compression is gated STRUCTURALLY: with codec="none" the
+    # body takes no residual, splits no extra key, and traces the exact
+    # pre-compression program (the bitwise pins depend on it)
+    lossy = fcfg.codec != "none"
+    ef = lossy and fcfg.error_feedback
 
-    def body(state: DistGANState, real, ages=None, weights=None):
+    def body(state: DistGANState, real, ages=None, weights=None,
+             residual=None):
         """real: (C, B, ...) private batches of the participating users
         (C == num_users under full participation); ``ages`` (C,) is each
         member's rounds-since-last-participation, consumed only by the
         staleness-aware combiners; ``weights`` (C,) is an optional
         per-member combine weight (the participation-adaptive
-        server_scale knob — core.federated.participation_weights)."""
-        key, kz1, kz2, ksel = jax.random.split(state.key, 4)
+        server_scale knob — core.federated.participation_weights);
+        ``residual`` (C, N) is each member's error-feedback row
+        (required iff the codec is lossy AND error_feedback is on, in
+        which case the body returns ``(state, metrics, new_residual)``).
+        """
+        assert (residual is not None) == ef, \
+            "residual rows are passed iff a lossy codec runs with " \
+            "error feedback"
+        if lossy:
+            key, kz1, kz2, ksel, kq = jax.random.split(state.key, 5)
+        else:
+            key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
         U = real.shape[0]
         fake = pair.g_apply(state.g, pair.sample_z(kz1, B))
@@ -194,6 +215,11 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
         # selection one masked op per user, the fold one argmax-|.| over
         # a contiguous buffer — no per-round pytree re-flattening.
         delta = layout.flatten_stacked(ds) - old_flat
+        if ef:
+            # EF-SGD: compensate with what last round's compression
+            # dropped BEFORE selection, so persistently-small
+            # coordinates accumulate until they win the mask
+            delta = delta + residual
         sel_keys = jax.random.split(ksel, U)
         rows = [select_delta_flat(delta[u], fcfg.selection,
                                   frac=fcfg.upload_frac, key=sel_keys[u],
@@ -201,6 +227,19 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
                 for u in range(U)]
         masked = jnp.stack([r[0] for r in rows])           # (C, N)
         kept = jnp.stack([r[1] for r in rows])
+        if lossy:
+            seed = (jax.random.randint(kq, (), 0, jnp.int32(2**31 - 1))
+                    if fcfg.codec_stochastic else None)
+            # what the server actually reconstructs from the wire
+            masked = codec_transport(masked, fcfg.codec,
+                                     stochastic=fcfg.codec_stochastic,
+                                     seed=seed,
+                                     use_kernel=fcfg.use_topk_kernel)
+        if ef:
+            # residual = compensated - transported: selection drop AND
+            # quantization error, re-injected next round (user-local,
+            # so computed before any server-side weighting)
+            new_residual = delta - masked
         if weights is not None:
             # opt-in participation-adaptive combine weight: scale each
             # member's upload BEFORE the fold (weights are normalized to
@@ -231,8 +270,11 @@ def make_approach1_body(pair, fcfg: DistGANConfig):
         g, g_opt, gl = _g_update(pair, g_opt_def, state, g_loss)
         new_state = DistGANState(g, g_opt, ds, d_opts, server_d,
                                  state.step + 1, key)
-        return new_state, {"d_loss": d_losses, "g_loss": gl,
-                           "kept_frac": jnp.mean(kept)}
+        metrics = {"d_loss": d_losses, "g_loss": gl,
+                   "kept_frac": jnp.mean(kept)}
+        if ef:
+            return new_state, metrics, new_residual
+        return new_state, metrics
 
     return body
 
@@ -269,13 +311,15 @@ def make_download_first_body(pair, fcfg: DistGANConfig):
     tests/test_spec.py)."""
     base = make_approach1_body(pair, fcfg)
 
-    def body(state: DistGANState, real, ages=None, weights=None):
+    def body(state: DistGANState, real, ages=None, weights=None,
+             residual=None):
         U = real.shape[0]
         ds = jax.tree.map(
             lambda s: jnp.broadcast_to(s[None], (U,) + s.shape),
             state.server_d)
         zero_ages = None if ages is None else jnp.zeros_like(ages)
-        return base(state._replace(ds=ds), real, zero_ages, weights)
+        return base(state._replace(ds=ds), real, zero_ages, weights,
+                    residual)
 
     return body
 

@@ -152,6 +152,14 @@ class CohortState(NamedTuple):
     key: jnp.ndarray
 
 
+def _wants_residual(fcfg: DistGANConfig) -> bool:
+    """Whether the configured transport keeps per-user error-feedback
+    rows: a lossy codec with error_feedback on.  The ONE gate every
+    engine/driver consults, so the residual is threaded (or absent)
+    consistently across device, host, and SPMD paths."""
+    return fcfg.codec != "none" and fcfg.error_feedback
+
+
 def init_cohort_state(pair, fcfg: DistGANConfig, key, *,
                       sync_ds: bool = False) -> CohortState:
     """Build the cohort carry from the standard ``init_state`` layout (the
@@ -159,7 +167,8 @@ def init_cohort_state(pair, fcfg: DistGANConfig, key, *,
     bit-exactly, so a C==U cohort run starts from the identical point)."""
     st = init_state(pair, fcfg, key, sync_ds=sync_ds)
     store = make_cohort_store(st.ds, st.d_opts, d_flat_layout(pair),
-                              d_opt_flat_layout(pair, fcfg))
+                              d_opt_flat_layout(pair, fcfg),
+                              error_feedback=_wants_residual(fcfg))
     return CohortState(st.g, st.g_opt, store, st.server_d, st.step, st.key)
 
 
@@ -187,6 +196,7 @@ def _cohort_round_fn(pair, fcfg: DistGANConfig, approach: str) -> Callable:
     body = appr.body_factory(pair, fcfg)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
+    ef = _wants_residual(fcfg)
 
     def round_fn(carry: CohortState, inp):
         real, idx, *rest = inp
@@ -201,7 +211,14 @@ def _cohort_round_fn(pair, fcfg: DistGANConfig, approach: str) -> Callable:
         ages = carry.step - store.last_round[idx]          # (C,) i32
         state = DistGANState(carry.g, carry.g_opt, ds, opts, carry.server_d,
                              carry.step, carry.key)
-        new_state, metrics = body(state, real, ages, w)
+        if ef:
+            # error-feedback rows ride the same gather/scatter as the D
+            # rows: user-local state, visible only to its own rounds
+            new_state, metrics, new_res = body(state, real, ages, w,
+                                               store.residual[idx])
+        else:
+            new_state, metrics = body(state, real, ages, w)
+            new_res = None
         # same reasoning on the way out: keep the scatter's flatten from
         # fusing back into the body's update/loss clusters
         nds, nopts = jax.lax.optimization_barrier(
@@ -212,7 +229,8 @@ def _cohort_round_fn(pair, fcfg: DistGANConfig, approach: str) -> Callable:
         # convention (fresh folds are no longer uniformly discounted by
         # one decay factor by the staleness combiners)
         store = cohort_scatter(store, idx, nds, nopts,
-                               carry.step + 1, d_layout, o_layout)
+                               carry.step + 1, d_layout, o_layout,
+                               residual=new_res)
         new_carry = CohortState(new_state.g, new_state.g_opt, store,
                                 new_state.server_d, new_state.step,
                                 new_state.key)
@@ -312,7 +330,9 @@ def make_spmd_cohort_engine(pair, fcfg: DistGANConfig, mesh, approach: str,
         rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
         carry_specs = CohortState(
             g=rep(cstate.g), g_opt=rep(cstate.g_opt),
-            store=CohortStore(PS(), PS(), PS()),
+            store=CohortStore(PS(), PS(), PS(),
+                              None if cstate.store.residual is None
+                              else PS()),
             server_d=rep(cstate.server_d), step=PS(), key=PS())
         metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
                         "kept_frac": PS(), "mean_age": PS()}
@@ -364,7 +384,9 @@ def make_spmd_fused_store_engine(pair, fcfg: DistGANConfig, mesh,
         rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
         carry_specs = CohortState(
             g=rep(cstate.g), g_opt=rep(cstate.g_opt),
-            store=CohortStore(PS(AXIS), PS(AXIS), PS(AXIS)),
+            store=CohortStore(PS(AXIS), PS(AXIS), PS(AXIS),
+                              None if cstate.store.residual is None
+                              else PS(AXIS)),
             server_d=rep(cstate.server_d), step=PS(), key=PS())
         metric_specs = {"d_loss": PS(None, AXIS), "g_loss": PS(),
                         "kept_frac": PS(), "mean_age": PS()}
@@ -440,6 +462,32 @@ def make_cohort_rows_engine(pair, fcfg: DistGANConfig,
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
 
+    if _wants_residual(fcfg):
+        # error-feedback variant: the cohort's residual rows arrive (and
+        # return) as one more donated (C, Nd) transfer, right after the
+        # opt rows — ``round(shared, d_rows, opt_rows, res_rows, ages,
+        # wts, real) -> (shared, nd, no, new_res, metrics)``
+        def round_fn_ef(shared: CohortShared, d_rows, opt_rows, res_rows,
+                        ages, wts, real):
+            ds = d_layout.unflatten_stacked(d_rows)
+            opts = o_layout.unflatten_stacked(opt_rows)
+            ds, opts = jax.lax.optimization_barrier((ds, opts))
+            state = DistGANState(shared.g, shared.g_opt, ds, opts,
+                                 shared.server_d, shared.step, shared.key)
+            new_state, metrics, new_res = body(state, real, ages, wts,
+                                               res_rows)
+            nds, nopts = jax.lax.optimization_barrier(
+                (new_state.ds, new_state.d_opts))
+            new_shared = CohortShared(new_state.g, new_state.g_opt,
+                                      new_state.server_d, new_state.step,
+                                      new_state.key)
+            metrics = dict(metrics,
+                           mean_age=jnp.mean(ages.astype(jnp.float32)))
+            return (new_shared, d_layout.flatten_stacked(nds),
+                    o_layout.flatten_stacked(nopts), new_res, metrics)
+
+        return jax.jit(round_fn_ef, donate_argnums=(1, 2, 3))
+
     def round_fn(shared: CohortShared, d_rows, opt_rows, ages, wts, real):
         ds = d_layout.unflatten_stacked(d_rows)
         opts = o_layout.unflatten_stacked(opt_rows)
@@ -507,9 +555,13 @@ def make_superbatch_engine(pair, fcfg: DistGANConfig, approach: str,
     body = appr.body_factory(pair, fcfg)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
+    ef = _wants_residual(fcfg)
 
     def round_fn(carry, inp):
-        shared, blk_d, blk_o = carry
+        if ef:
+            shared, blk_d, blk_o, blk_r = carry
+        else:
+            shared, blk_d, blk_o = carry
         r, fwd, ages, real, *rest = inp
         w = rest[0] if rest else None
         C = fwd.shape[0]
@@ -526,7 +578,16 @@ def make_superbatch_engine(pair, fcfg: DistGANConfig, approach: str,
         ds, opts = jax.lax.optimization_barrier((ds, opts))
         state = DistGANState(shared.g, shared.g_opt, ds, opts,
                              shared.server_d, shared.step, shared.key)
-        new_state, metrics = body(state, real, ages, w)
+        if ef:
+            # the residual block forwards through the SAME src plan: a
+            # member repeating in-window reads the residual its earlier
+            # round just wrote, exactly as the per-round path would have
+            # scattered to the host and regathered
+            res_rows = blk_r.reshape(-1, blk_r.shape[-1])[src]
+            new_state, metrics, new_res = body(state, real, ages, w,
+                                               res_rows)
+        else:
+            new_state, metrics = body(state, real, ages, w)
         nds, nopts = jax.lax.optimization_barrier(
             (new_state.ds, new_state.d_opts))
         new_shared = CohortShared(new_state.g, new_state.g_opt,
@@ -535,7 +596,31 @@ def make_superbatch_engine(pair, fcfg: DistGANConfig, approach: str,
         blk_d = blk_d.at[r].set(d_layout.flatten_stacked(nds))
         blk_o = blk_o.at[r].set(o_layout.flatten_stacked(nopts))
         metrics = dict(metrics, mean_age=jnp.mean(ages.astype(jnp.float32)))
+        if ef:
+            blk_r = blk_r.at[r].set(new_res)
+            return (new_shared, blk_d, blk_o, blk_r), metrics
         return (new_shared, blk_d, blk_o), metrics
+
+    if ef:
+        def window_ef(shared, blk_d, blk_o, blk_r, fwd, ages, real,
+                      wts=None, valid=None):
+            assert (wts is not None) == adaptive, \
+                "wts must be supplied iff the engine was built adaptive=True"
+            k = blk_d.shape[0]
+            r_idx = jnp.arange(k, dtype=jnp.int32)
+            xs = (r_idx, fwd, ages, real)
+            if wts is not None:
+                xs = xs + (wts,)
+            carry = (shared, blk_d, blk_o, blk_r)
+            if valid is None:
+                carry, metrics = jax.lax.scan(round_fn, carry, xs)
+            else:
+                carry, metrics = jax.lax.scan(_masked(round_fn), carry,
+                                              (xs, valid))
+            shared, blk_d, blk_o, blk_r = carry
+            return shared, blk_d, blk_o, blk_r, metrics
+
+        return jax.jit(window_ef, donate_argnums=(1, 2, 3))
 
     def window(shared, blk_d, blk_o, fwd, ages, real, wts=None, valid=None):
         assert (wts is not None) == adaptive, \
@@ -598,8 +683,11 @@ def init_host_backend(pair, fcfg: DistGANConfig, key, *,
     o_row = np.asarray(ol.flatten(d_opt_def.init(d0)), np.float32)
     opt_flat = np.broadcast_to(o_row, (U, ol.n)).copy()
 
+    residual = (np.zeros((U, dl.n), np.float32)
+                if _wants_residual(fcfg) else None)
     backend = HostStateBackend(d_flat, opt_flat,
-                               np.zeros((U,), np.int32))
+                               np.zeros((U,), np.int32),
+                               residual=residual)
     shared = CohortShared(g, g_opt_def.init(g), d0,
                           jnp.zeros((), jnp.int32), kk)
     return shared, backend

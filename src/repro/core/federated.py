@@ -121,11 +121,18 @@ class CohortStore(NamedTuple):
                             and cast back on unflatten — exact below 2**24,
                             far beyond any round count here)
     ``last_round`` (U,) i32 round at which the user last participated
+    ``residual``   (U, Nd) f32 error-feedback residual (what upload
+                            compression dropped from the user's last
+                            delta, re-added to its next one) — or None
+                            when no lossy codec is configured.  ``None``
+                            is not a pytree leaf, so codec-free stores
+                            keep the exact pre-compression structure.
     """
 
     d_flat: jnp.ndarray
     opt_flat: jnp.ndarray
     last_round: jnp.ndarray
+    residual: Any = None
 
     @property
     def num_users(self) -> int:
@@ -133,13 +140,17 @@ class CohortStore(NamedTuple):
 
 
 def make_cohort_store(ds, d_opts, d_layout: FlatLayout,
-                      opt_layout: FlatLayout) -> CohortStore:
-    """Pack (U, ...)-stacked D/optimizer trees into resident flat buffers."""
+                      opt_layout: FlatLayout, *,
+                      error_feedback: bool = False) -> CohortStore:
+    """Pack (U, ...)-stacked D/optimizer trees into resident flat buffers.
+    ``error_feedback`` allocates the zero-initialized (U, Nd) residual."""
     u = jax.tree.leaves(ds)[0].shape[0]
+    d_flat = d_layout.flatten_stacked(ds)
     return CohortStore(
-        d_flat=d_layout.flatten_stacked(ds),
+        d_flat=d_flat,
         opt_flat=opt_layout.flatten_stacked(d_opts),
-        last_round=jnp.zeros((u,), jnp.int32))
+        last_round=jnp.zeros((u,), jnp.int32),
+        residual=jnp.zeros_like(d_flat) if error_feedback else None)
 
 
 def cohort_gather(store: CohortStore, idx, d_layout: FlatLayout,
@@ -152,15 +163,22 @@ def cohort_gather(store: CohortStore, idx, d_layout: FlatLayout,
 
 
 def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
-                   d_layout: FlatLayout, opt_layout: FlatLayout) -> CohortStore:
+                   d_layout: FlatLayout, opt_layout: FlatLayout,
+                   residual=None) -> CohortStore:
     """Write updated cohort slices back into the store (row replacement —
-    values land bit-exactly) and stamp the members' ``last_round``."""
+    values land bit-exactly) and stamp the members' ``last_round``.
+    ``residual`` scatters the cohort's updated error-feedback rows when
+    the store carries them (required iff ``store.residual`` exists)."""
+    assert (residual is None) == (store.residual is None), \
+        "residual rows must be scattered iff the store carries them"
     return CohortStore(
         d_flat=store.d_flat.at[idx].set(d_layout.flatten_stacked(ds)),
         opt_flat=store.opt_flat.at[idx].set(
             opt_layout.flatten_stacked(d_opts)),
         last_round=store.last_round.at[idx].set(
-            jnp.asarray(round_idx, jnp.int32)))
+            jnp.asarray(round_idx, jnp.int32)),
+        residual=(None if store.residual is None
+                  else store.residual.at[idx].set(residual)))
 
 
 # ---------------------------------------------------------------------------
@@ -191,7 +209,13 @@ def cohort_scatter(store: CohortStore, idx, ds, d_opts, round_idx,
 # driver's ``async_rounds`` and surfaced through ``last_round`` ages.
 
 class UserStateBackend:
-    """Abstract residency contract for per-user D/optimizer rows."""
+    """Abstract residency contract for per-user D/optimizer rows.
+
+    ``gather_rows`` stays a 3-tuple regardless of compression; backends
+    that hold an error-feedback residual expose it through
+    ``gather_residual`` and take the updated rows back through
+    ``scatter_rows(..., residual=...)`` — drivers probe ``has_residual``.
+    """
 
     num_users: int
 
@@ -204,7 +228,15 @@ class UserStateBackend:
     def gather_rows(self, idx):
         raise NotImplementedError
 
-    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx, *,
+                     residual=None) -> None:
+        raise NotImplementedError
+
+    @property
+    def has_residual(self) -> bool:
+        return False
+
+    def gather_residual(self, idx):
         raise NotImplementedError
 
     def snapshot(self) -> CohortStore:
@@ -234,13 +266,26 @@ class DeviceStateBackend(UserStateBackend):
         return (self.store.d_flat[idx], self.store.opt_flat[idx],
                 self.store.last_round[idx])
 
-    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx, *,
+                     residual=None) -> None:
         idx = jnp.asarray(idx)
+        store = self.store
+        assert (residual is None) == (store.residual is None)
         self.store = CohortStore(
-            d_flat=self.store.d_flat.at[idx].set(jnp.asarray(d_rows)),
-            opt_flat=self.store.opt_flat.at[idx].set(jnp.asarray(opt_rows)),
-            last_round=self.store.last_round.at[idx].set(
-                jnp.asarray(round_idx, jnp.int32)))
+            d_flat=store.d_flat.at[idx].set(jnp.asarray(d_rows)),
+            opt_flat=store.opt_flat.at[idx].set(jnp.asarray(opt_rows)),
+            last_round=store.last_round.at[idx].set(
+                jnp.asarray(round_idx, jnp.int32)),
+            residual=(None if store.residual is None
+                      else store.residual.at[idx].set(
+                          jnp.asarray(residual))))
+
+    @property
+    def has_residual(self) -> bool:
+        return self.store.residual is not None
+
+    def gather_residual(self, idx):
+        return self.store.residual[jnp.asarray(idx)]
 
     def snapshot(self) -> CohortStore:
         return self.store
@@ -253,7 +298,7 @@ class HostStateBackend(UserStateBackend):
     logical population is bounded by host RAM, not HBM."""
 
     def __init__(self, d_flat: np.ndarray, opt_flat: np.ndarray,
-                 last_round: np.ndarray):
+                 last_round: np.ndarray, residual: np.ndarray | None = None):
         u = d_flat.shape[0]
         assert opt_flat.shape[0] == u and last_round.shape == (u,)
 
@@ -266,6 +311,8 @@ class HostStateBackend(UserStateBackend):
         self.d_flat = own(d_flat, np.float32)
         self.opt_flat = own(opt_flat, np.float32)
         self.last_round = own(last_round, np.int32)
+        self.residual = None if residual is None else own(residual,
+                                                          np.float32)
 
     @property
     def num_users(self) -> int:
@@ -274,17 +321,30 @@ class HostStateBackend(UserStateBackend):
     @classmethod
     def from_store(cls, store: CohortStore) -> "HostStateBackend":
         return cls(np.asarray(store.d_flat), np.asarray(store.opt_flat),
-                   np.asarray(store.last_round))
+                   np.asarray(store.last_round),
+                   None if store.residual is None
+                   else np.asarray(store.residual))
 
     def gather_rows(self, idx):
         idx = np.asarray(idx)
         return (self.d_flat[idx], self.opt_flat[idx], self.last_round[idx])
 
-    def scatter_rows(self, idx, d_rows, opt_rows, round_idx) -> None:
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx, *,
+                     residual=None) -> None:
         idx = np.asarray(idx)
         self.d_flat[idx] = np.asarray(d_rows)
         self.opt_flat[idx] = np.asarray(opt_rows)
         self.last_round[idx] = np.int32(round_idx)
+        assert (residual is None) == (self.residual is None)
+        if residual is not None:
+            self.residual[idx] = np.asarray(residual)
+
+    @property
+    def has_residual(self) -> bool:
+        return self.residual is not None
+
+    def gather_residual(self, idx):
+        return self.residual[np.asarray(idx)]
 
     def snapshot(self) -> CohortStore:
         # jnp.asarray may zero-copy a large aligned host buffer on the
@@ -292,7 +352,9 @@ class HostStateBackend(UserStateBackend):
         # silently corrupted by later in-place scatters.  Force copies.
         return CohortStore(jnp.array(self.d_flat),
                            jnp.array(self.opt_flat),
-                           jnp.array(self.last_round))
+                           jnp.array(self.last_round),
+                           None if self.residual is None
+                           else jnp.array(self.residual))
 
 
 # ---------------------------------------------------------------------------
@@ -521,6 +583,75 @@ def select_delta(delta_tree, policy: Selection, *, frac=0.1, tau=0.0,
 
 
 # ---------------------------------------------------------------------------
+# Transport codecs (wire encoding of the selected delta rows)
+# ---------------------------------------------------------------------------
+#
+# A codec is applied AFTER the selection policy masks a row: the server
+# sees dequantize(quantize(masked)) — exactly what a receiver could
+# reconstruct from the packed wire payload.  ``codec_transport`` is that
+# round-trip as one in-graph map over stacked (R, N) rows; the error-
+# feedback residual (compensated - transported) is computed by the
+# callers (approaches/spmd), because only they know the compensation.
+
+def codec_transport(rows: jnp.ndarray, codec: str, *,
+                    stochastic: bool = False, seed=None,
+                    use_kernel: bool = False) -> jnp.ndarray:
+    """Stacked (R, N) rows -> what the receiver reconstructs after the
+    lossy wire round-trip.  ``none`` is the identity (and callers gate it
+    out structurally, keeping codec-free programs bitwise-pinned);
+    ``bf16`` is a double cast; the int8 codecs quantize per row with one
+    absmax scale — through the Pallas kernels when ``use_kernel`` (same
+    flag that routes top-k selection), else the jnp oracle.  ``seed``
+    (traced int32) drives stochastic rounding."""
+    if codec == "none":
+        return rows
+    if codec == "bf16":
+        return rows.astype(jnp.bfloat16).astype(jnp.float32)
+    if codec in ("int8", "topk_int8"):
+        if use_kernel:
+            from repro.kernels import ops as kops
+            q, scale = kops.quantize_rows(rows, stochastic=stochastic,
+                                          seed=seed)
+            return kops.dequantize_rows(q, scale)
+        from repro.kernels.ref import dequantize_rows_ref, quantize_rows_ref
+        q, scale = quantize_rows_ref(rows, stochastic=stochastic, seed=seed)
+        return dequantize_rows_ref(q, scale)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def packed_payload_nbytes(row, policy: Selection | str,
+                          codec: str = "none") -> int:
+    """Materialize ONE transported (already-masked) row's wire payload as
+    real packed buffers — int32 indices, codec-encoded values, per-row
+    scale — and return their total nbytes.  This is the ground truth the
+    ``upload_bytes_flat`` pricing table is asserted against in tests and
+    measured against in the compression bench."""
+    row = np.asarray(row, np.float32)
+    assert row.ndim == 1, f"one row at a time, got {row.shape}"
+    nbytes = 0
+    if policy == "none":
+        vals = row
+    elif policy == "shared_random":
+        vals = row[np.nonzero(row)[0]]       # indices derive from the
+    else:                                    # shared key: values only
+        idx = np.nonzero(row)[0].astype(np.int32)
+        vals = row[idx]
+        nbytes += idx.nbytes
+    if codec == "none":
+        nbytes += vals.nbytes
+    elif codec == "bf16":
+        nbytes += np.asarray(
+            jnp.asarray(vals).astype(jnp.bfloat16)).nbytes
+    elif codec in ("int8", "topk_int8"):
+        from repro.kernels.ref import quantize_rows_ref
+        q, scale = quantize_rows_ref(jnp.asarray(vals)[None])
+        nbytes += np.asarray(q).nbytes + np.asarray(scale).nbytes
+    else:
+        raise ValueError(f"unknown codec {codec!r}")
+    return nbytes
+
+
+# ---------------------------------------------------------------------------
 # Server combination rules
 # ---------------------------------------------------------------------------
 
@@ -674,9 +805,11 @@ def combine_shared_random_flat_spmd(flat: jnp.ndarray, frac: float, key,
 # ---------------------------------------------------------------------------
 
 def upload_bytes(delta_tree, policy: Selection, frac: float = 0.1, *,
-                 tau: float = 0.0, kept_frac: float | None = None) -> int:
+                 tau: float = 0.0, kept_frac: float | None = None,
+                 codec: str = "none") -> int:
     """Bytes per user per round crossing the privacy boundary.  Sparse
-    uploads ship (index, value) pairs: 4B idx + 4B val per kept entry.
+    uploads ship (index, value) pairs: 4B idx + codec value bytes per
+    kept entry.
 
     ``topk``/``random`` keep a deterministic/expected ``frac`` of entries.
     ``threshold`` does NOT use ``frac`` — its kept count is data-dependent,
@@ -689,28 +822,42 @@ def upload_bytes(delta_tree, policy: Selection, frac: float = 0.1, *,
         kept = sum(int(jnp.sum(jnp.abs(l) > tau))
                    for l in jax.tree.leaves(delta_tree))
         kept_frac = kept / n
-    return upload_bytes_flat(n, policy, frac, kept_frac=kept_frac)
+    return upload_bytes_flat(n, policy, frac, kept_frac=kept_frac,
+                             codec=codec)
+
+
+# bytes per transported value on the wire, by codec
+_CODEC_VALUE_BYTES = {"none": 4, "bf16": 2, "int8": 1, "topk_int8": 1}
 
 
 def upload_bytes_flat(n: int, policy: Selection | str, frac: float = 0.1, *,
-                      kept_frac: float | None = None) -> int:
+                      kept_frac: float | None = None,
+                      codec: str = "none") -> int:
     """Per-user upload bytes from the flat buffer size alone (no delta
     tree needed — the cohort drivers know only ``FlatLayout.n``).  The
     ONE pricing table: ``upload_bytes`` delegates here after computing
-    ``n`` (and, for ``threshold``, the kept count) from its delta tree.
+    ``n`` (and, for ``threshold``, the kept count) from its delta tree,
+    and the priced numbers equal ``packed_payload_nbytes`` on the real
+    packed buffers (asserted in tests/test_cohort.py).
 
-    Dense ``none`` ships 4B per entry; sparse ``topk``/``random``/
-    ``threshold`` ship (index, value) pairs at 8B per kept entry
+    Dense ``none`` ships one value per entry; sparse ``topk``/``random``/
+    ``threshold`` ship (4B index, value) pairs per kept entry
     (``threshold`` MUST be given the measured ``kept_frac`` — its kept
-    count is data-dependent).  ``shared_random`` ships values only (the
+    count is data-dependent); ``shared_random`` ships values only (the
     mask is derived from a shared per-round key, so no indices cross the
-    wire): 4B per kept entry."""
+    wire).  The ``codec`` sets the value width — 4B float32 (``none``),
+    2B ``bf16``, 1B for the int8 codecs plus one 4B float32 scale per
+    row."""
+    vb = _CODEC_VALUE_BYTES[codec]
+    sb = 4 if codec in ("int8", "topk_int8") else 0   # per-row f32 scale
     if policy == "none":
-        return 4 * n
+        return n * vb + sb
     if policy == "threshold":
         assert kept_frac is not None, \
             "threshold accounting needs the measured kept_frac"
-        return int(round(n * float(kept_frac))) * 8
-    if policy == "shared_random":
-        return max(int(n * frac), 1) * 4
-    return int(n * frac) * 8
+        kept = int(round(n * float(kept_frac)))
+    elif policy == "shared_random":
+        return max(int(n * frac), 1) * vb + sb
+    else:
+        kept = int(n * frac)
+    return kept * (4 + vb) + sb

@@ -29,8 +29,8 @@ from repro.core.approaches import DistGANConfig
 from repro.core.session import (FederationSession, RunResult,  # noqa: F401
                                 StreamStats, stream_cohort_rounds)
 from repro.core.spec import (BackendSpec, CombineSpec,  # noqa: F401
-                             DEFAULT_ROUNDS_PER_JIT, EngineSpec,
-                             FederationSpec, ParticipationSpec)
+                             CompressionSpec, DEFAULT_ROUNDS_PER_JIT,
+                             EngineSpec, FederationSpec, ParticipationSpec)
 from repro.data.federated import FederatedDataset
 
 
@@ -54,6 +54,10 @@ def run_distgan(
     prefetch: bool = True,
     adaptive_server_scale: bool = False,
     materialize_state: bool = True,
+    codec: str = "none",
+    error_feedback: bool = True,
+    codec_stochastic: bool = False,
+    stage_rows: bool = False,
 ) -> RunResult:
     """Train with a registered approach (approach1/2/3, baseline,
     download_first, ...) for ``steps`` rounds.
@@ -93,6 +97,10 @@ def run_distgan(
       streaming pipeline knobs.
     * ``adaptive_server_scale`` (+ ``fcfg.combiner`` /
       ``fcfg.staleness_decay``) → :class:`CombineSpec`.
+    * ``codec`` / ``error_feedback`` / ``codec_stochastic`` /
+      ``stage_rows`` → :class:`CompressionSpec` — the upload transport
+      codec (``none`` | ``bf16`` | ``int8`` | ``topk_int8``), its EF-SGD
+      residual, stochastic rounding, and quantized state-row staging.
 
     Conflicting kwarg combinations that used to resolve silently now
     emit a ``DeprecationWarning`` before being resolved (e.g. a
@@ -150,7 +158,12 @@ def run_distgan(
                             materialize_state=materialize_state),
         combine=CombineSpec(combiner=fcfg.combiner,
                             staleness_decay=fcfg.staleness_decay,
-                            adaptive_server_scale=adaptive_server_scale),
+                            adaptive_server_scale=adaptive_server_scale,
+                            compression=CompressionSpec(
+                                codec=codec,
+                                error_feedback=error_feedback,
+                                stochastic=codec_stochastic,
+                                stage_rows=stage_rows)),
     )
     return FederationSession(pair, fcfg, dataset, spec).run(steps)
 

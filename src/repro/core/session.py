@@ -54,10 +54,10 @@ from repro.checkpoint.msgpack_ckpt import (latest_step, restore_checkpoint,
 from repro.core.approaches import (DistGANConfig, d_flat_layout,
                                    init_state)
 from repro.core.engine import (CohortShared, CohortState, _pad_to,
-                               cohort_state_to_full, init_cohort_state,
-                               init_host_backend, make_cohort_engine,
-                               make_cohort_rows_engine, make_engine,
-                               make_fused_store_engine,
+                               _wants_residual, cohort_state_to_full,
+                               init_cohort_state, init_host_backend,
+                               make_cohort_engine, make_cohort_rows_engine,
+                               make_engine, make_fused_store_engine,
                                make_superbatch_engine)
 from repro.core.federated import (make_schedule_source,
                                   participation_weights, upload_bytes_flat,
@@ -177,27 +177,55 @@ def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
 
 
 def _upload_accounting(pair, fcfg: DistGANConfig, approach, C: int,
-                       kept_frac: float) -> dict:
+                       kept_frac: float, *,
+                       stage_rows: bool = False) -> dict:
     """Cohort-aware per-round upload bytes: C members upload per round —
     NOT the full population U.  Only delta-uploading approaches
     (``ApproachDef.uploads``) ship parameters across the privacy
     boundary; approaches 2/3 exchange logits/gradients and the baseline
     nothing, so the key is absent there.  For the data-dependent
     ``threshold`` policy, pass the RUN-MEAN measured kept fraction (a
-    single round's value misprices a drifting threshold)."""
+    single round's value misprices a drifting threshold).
+
+    The transport codec reprices the payload (``upload_bytes_flat``):
+    value bytes shrink to the codec width and int8 codecs add the
+    per-row scale.  ``extra["compression"]`` records the full transport
+    configuration alongside the priced bytes."""
     if not resolve_approach(approach).uploads:
         return {}
     n = d_flat_layout(pair).n
     kf = kept_frac if fcfg.selection == "threshold" else None
     per_user = upload_bytes_flat(n, fcfg.selection, fcfg.upload_frac,
-                                 kept_frac=kf)
+                                 kept_frac=kf, codec=fcfg.codec)
+    lossy = fcfg.codec != "none"
     return {"upload_bytes_per_user": per_user,
-            "upload_bytes_per_round": C * per_user}
+            "upload_bytes_per_round": C * per_user,
+            "compression": {
+                "codec": fcfg.codec,
+                "error_feedback": bool(lossy and fcfg.error_feedback),
+                "stochastic": bool(lossy and fcfg.codec_stochastic),
+                "stage_rows": bool(stage_rows)}}
 
 
 # ---------------------------------------------------------------------------
 # Streaming driver (rows engines over a UserStateBackend)
 # ---------------------------------------------------------------------------
+
+def _np_quantize_rows(x: np.ndarray):
+    """Host-side per-row absmax int8 — the numpy mirror of
+    ``kernels.ref.quantize_rows_ref`` (deterministic path), used by the
+    ``stage_rows`` transport to shrink H2D staging to 1 byte/element."""
+    x = np.asarray(x, np.float32)
+    scale = (np.abs(x).max(axis=1) / np.float32(127.0)).astype(np.float32)
+    inv = np.where(scale > 0, np.float32(1.0) / scale,
+                   np.float32(0.0)).astype(np.float32)
+    q = np.clip(np.rint(x * inv[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def _np_dequantize_rows(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale[:, None].astype(np.float32)
+
 
 class StreamStats(typing.NamedTuple):
     retire_t: list    # perf_counter stamp when round r's scatter landed
@@ -207,7 +235,7 @@ class StreamStats(typing.NamedTuple):
 def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
                          batch_fn: Callable, *, async_rounds: int = 0,
                          prefetch: bool = True, wts: np.ndarray | None = None,
-                         round_base: int = 0):
+                         round_base: int = 0, stage_codec: str = "none"):
     """Double-buffered streaming driver over a rows engine.
 
     ``eng(shared, d_rows, opt_rows, ages, wts_row, real)`` is dispatched
@@ -250,11 +278,28 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
     nothing else to do), while the double-buffered/async modes stage
     round k+1 under round k's compute and retire long-finished rounds —
     stalls collapse toward zero (gated in benchmarks paper_stream).
+
+    ``stage_codec="int8"`` (CompressionSpec.stage_rows on a host store)
+    moves the cohort's D rows across the PCIe boundary quantized: H2D
+    ships int8 + per-row scale (host-side numpy quantizer) and
+    dequantizes on device; D2H quantizes on device and dequantizes back
+    into the host store — 4x fewer staged bytes each way.  This is a
+    LOSSY store transport (the row rounds through int8 every round);
+    optimizer rows and EF residuals stay exact f32 — the residual is the
+    error-feedback ledger and quantizing it would break the
+    compensation invariant.
     """
     steps = len(schedule)
     metrics_out: list = [None] * steps
     stats = StreamStats([0.0] * steps, [0.0] * steps)
     inflight: collections.deque = collections.deque()
+    has_res = getattr(backend, "has_residual", False)
+    stage_q = stage_codec != "none"
+    if stage_q:
+        assert stage_codec == "int8", stage_codec
+        from repro.kernels import ops as kops
+        if getattr(backend, "device_resident", False):
+            stage_q = False   # rows never cross the boundary — nothing to save
 
     def stage_rows(r):
         d_rows, o_rows, last = backend.gather_rows(schedule[r])
@@ -276,26 +321,46 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
                 return a
             return jax.device_put(np.ascontiguousarray(a))
 
-        return put(d_rows), put(o_rows), ages
+        if stage_q:
+            q, s = _np_quantize_rows(np.asarray(d_rows))
+            d_dev = kops.dequantize_rows(jax.device_put(q),
+                                         jax.device_put(s))
+        else:
+            d_dev = put(d_rows)
+        out = (d_dev, put(o_rows))
+        if has_res:
+            out = out + (put(backend.gather_residual(schedule[r])),)
+        return out + (ages,)
 
     def stage_data(r):
         return jax.device_put(np.asarray(batch_fn(r)))
 
     def retire(keep: int):
         while len(inflight) > keep:
-            rr, ii, nd, no, m = inflight.popleft()
+            rr, ii, nd, no, nres, m = inflight.popleft()
             t0 = time.perf_counter()
             if getattr(backend, "device_resident", False):
                 # device-resident store: the updated rows never leave the
                 # device — scatter is a functional .at[].set on device
                 # arrays, and the only host block is the metrics fetch
-                backend.scatter_rows(ii, nd, no, round_base + rr + 1)
+                backend.scatter_rows(ii, nd, no, round_base + rr + 1,
+                                     residual=nres)
                 metrics_out[rr] = jax.tree.map(np.asarray, m)
                 stats.stall_s[rr] = time.perf_counter() - t0
             else:
-                nd, no = np.asarray(nd), np.asarray(no)  # blocks on rr
+                if stage_q:
+                    # nd arrived as (q, scale) — the D2H fetch moves int8
+                    # + one f32 per row instead of the dense f32 row
+                    q, s = np.asarray(nd[0]), np.asarray(nd[1])
+                    no = np.asarray(no)    # blocks on rr
+                    nd = _np_dequantize_rows(q, s)
+                else:
+                    nd, no = np.asarray(nd), np.asarray(no)  # blocks on rr
+                if nres is not None:
+                    nres = np.asarray(nres)
                 stats.stall_s[rr] = time.perf_counter() - t0
-                backend.scatter_rows(ii, nd, no, round_base + rr + 1)
+                backend.scatter_rows(ii, nd, no, round_base + rr + 1,
+                                     residual=nres)
                 metrics_out[rr] = jax.tree.map(np.asarray, m)
             stats.retire_t[rr] = time.perf_counter()
 
@@ -304,8 +369,16 @@ def stream_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
     for r in range(steps):
         w = None if wts is None else jnp.asarray(np.asarray(wts[r],
                                                             np.float32))
-        shared, nd, no, m = eng(shared, rows[0], rows[1], rows[2], w, data)
-        inflight.append((r, np.asarray(schedule[r]), nd, no, m))
+        if has_res:
+            shared, nd, no, nres, m = eng(shared, rows[0], rows[1], rows[2],
+                                          rows[3], w, data)
+        else:
+            shared, nd, no, m = eng(shared, rows[0], rows[1], rows[2],
+                                    w, data)
+            nres = None
+        if stage_q:
+            nd = kops.quantize_rows(nd)    # D2H payload: (int8, scale)
+        inflight.append((r, np.asarray(schedule[r]), nd, no, nres, m))
         last = r + 1 == steps
         if prefetch and not last:
             data = stage_data(r + 1)       # overlaps round r's compute
@@ -365,6 +438,7 @@ def superbatch_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
     rpj = rounds_per_jit
     metrics_out: list = [None] * steps
     stats = SuperbatchStats([], [], [])
+    has_res = getattr(backend, "has_residual", False)
     data = None
     i = 0
     while i < steps:
@@ -377,16 +451,31 @@ def superbatch_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
         rows = [backend.gather_rows(schedule[i + r]) for r in range(k)]
         d_blk = _pad_to(np.stack([np.asarray(r_[0]) for r_ in rows]), rpj)
         o_blk = _pad_to(np.stack([np.asarray(r_[1]) for r_ in rows]), rpj)
+        r_blk = None
+        if has_res:
+            # the residual block rides the same forwarding plan as the
+            # d/o rows — an in-window repeat reads the residual its
+            # earlier round wrote (see make_superbatch_engine)
+            r_blk = _pad_to(np.stack(
+                [np.asarray(backend.gather_residual(schedule[i + r]))
+                 for r in range(k)]), rpj)
         if data is None:
             data = _chunk_stack(batch_fn, i, k, rpj)
         w = None
         if wts is not None:
             w = jnp.asarray(_pad_to(np.asarray(wts[i:i + k], np.float32),
                                     rpj))
-        shared, out_d, out_o, m = eng(
-            shared, jax.device_put(d_blk), jax.device_put(o_blk),
-            jnp.asarray(fwd), jnp.asarray(ages), data, w,
-            _valid_mask(k, rpj))
+        if has_res:
+            shared, out_d, out_o, out_r, m = eng(
+                shared, jax.device_put(d_blk), jax.device_put(o_blk),
+                jax.device_put(r_blk), jnp.asarray(fwd), jnp.asarray(ages),
+                data, w, _valid_mask(k, rpj))
+        else:
+            shared, out_d, out_o, m = eng(
+                shared, jax.device_put(d_blk), jax.device_put(o_blk),
+                jnp.asarray(fwd), jnp.asarray(ages), data, w,
+                _valid_mask(k, rpj))
+            out_r = None
         # sample the NEXT window's batches while this one computes (rng
         # order stays strictly sequential, so trajectories are
         # prefetch-neutral exactly as in the per-round stream)
@@ -396,11 +485,15 @@ def superbatch_cohort_rounds(eng, shared, backend, schedule: np.ndarray,
             data = _chunk_stack(batch_fn, i + k, kn, rpj)
         t0 = time.perf_counter()
         out_d, out_o = np.asarray(out_d), np.asarray(out_o)  # THE stall
+        if out_r is not None:
+            out_r = np.asarray(out_r)
         stats.win_stall_s.append(time.perf_counter() - t0)
         mets = jax.tree.map(np.asarray, m)
         for r in range(k):
             backend.scatter_rows(s_pad[r], out_d[r], out_o[r],
-                                 round_base + i + r + 1)
+                                 round_base + i + r + 1,
+                                 residual=(None if out_r is None
+                                           else out_r[r]))
             metrics_out[i + r] = jax.tree.map(lambda x: x[r], mets)
         stats.win_retire_t.append(time.perf_counter())
         stats.win_rounds.append(k)
@@ -769,12 +862,16 @@ class HostStreamDriver(BackendDriver):
         # store-resident fusion request: legal only for the synchronous
         # host stream.  Async bounded staleness is inherently per-round
         # (an in-flight scatter would invalidate a window's pre-gathered
-        # rows) and the spmd driver maps each round's rows onto the mesh
-        # — both FALL BACK to the per-round stream and report
+        # rows), the spmd driver maps each round's rows onto the mesh,
+        # and quantized row staging (stage_rows) is a per-round PCIe
+        # transport — all FALL BACK to the per-round stream and report
         # extra["fused_store"] = False.
+        self.stage_rows = (sp.combine.compression.stage_rows
+                           and self.backend_name == "host")
         self.fused_store = (sp.engine.fuse_store_rounds
                             and self.backend_name == "host"
-                            and sp.backend.async_rounds == 0)
+                            and sp.backend.async_rounds == 0
+                            and not self.stage_rows)
         self.win_eng = None
         if self.fused_store:
             self.win_eng = make_superbatch_engine(
@@ -801,28 +898,41 @@ class HostStreamDriver(BackendDriver):
 
         nd = d_flat_layout(pair).n
         no = d_opt_flat_layout(pair, fcfg).n
-        return {"shared": jax.eval_shape(shared_shape),
+        tmpl = {"shared": jax.eval_shape(shared_shape),
                 "d_flat": jax.ShapeDtypeStruct((U, nd), np.float32),
                 "opt_flat": jax.ShapeDtypeStruct((U, no), np.float32),
                 "last_round": jax.ShapeDtypeStruct((U,), np.int32)}
+        if _wants_residual(fcfg):
+            # the EF residual is part of the trajectory — dropping it on
+            # restore would silently re-zero the compensation ledger.
+            # codec="none" specs keep the pre-PR 4-key layout, so old
+            # checkpoints stay restorable.
+            tmpl["residual"] = jax.ShapeDtypeStruct((U, nd), np.float32)
+        return tmpl
 
     # -- checkpoint state --------------------------------------------------
 
     def arrays(self):
         if self.backend is None:
             return self._template
-        return {"shared": _pack_key(self.shared),
-                "d_flat": self.backend.d_flat,
-                "opt_flat": self.backend.opt_flat,
-                "last_round": self.backend.last_round}
+        out = {"shared": _pack_key(self.shared),
+               "d_flat": self.backend.d_flat,
+               "opt_flat": self.backend.opt_flat,
+               "last_round": self.backend.last_round}
+        if self.backend.has_residual:
+            out["residual"] = self.backend.residual
+        return out
 
     def load_arrays(self, tree) -> None:
         from repro.core.federated import HostStateBackend
         self.shared = _unpack_key(
             jax.tree.map(jnp.asarray, tree["shared"]))
-        self.backend = HostStateBackend(np.asarray(tree["d_flat"]),
-                                        np.asarray(tree["opt_flat"]),
-                                        np.asarray(tree["last_round"]))
+        self.backend = HostStateBackend(
+            np.asarray(tree["d_flat"]),
+            np.asarray(tree["opt_flat"]),
+            np.asarray(tree["last_round"]),
+            residual=(np.asarray(tree["residual"])
+                      if "residual" in tree else None))
 
     # -- serve handles -----------------------------------------------------
 
@@ -882,7 +992,8 @@ class HostStreamDriver(BackendDriver):
                 self.eng, self.shared, self.backend, schedule, batch_round,
                 async_rounds=sp.backend.async_rounds,
                 prefetch=sp.backend.prefetch, wts=wts,
-                round_base=sess.round)
+                round_base=sess.round,
+                stage_codec="int8" if self.stage_rows else "none")
 
             retire_t = stats.retire_t
             compile_s = retire_t[0] - t0
@@ -951,8 +1062,9 @@ class HostStreamDriver(BackendDriver):
                        sp.combine.adaptive_server_scale,
                    **({"participation_weights": wts}
                       if wts is not None else {}),
-                   **_upload_accounting(sess.pair, sess.fcfg, sp.approach,
-                                        C, kept_mean)},
+                   **_upload_accounting(
+                       sess.pair, sess.fcfg, sp.approach, C, kept_mean,
+                       stage_rows=sp.combine.compression.stage_rows)},
         )
 
 
@@ -986,9 +1098,18 @@ class FederationSession:
         self.dataset = dataset
         self.spec = spec
         self.mesh = mesh
+        comp = spec.combine.compression
+        if comp.codec == "topk_int8" and fcfg.selection not in (
+                "topk", "threshold"):
+            raise ValueError(
+                f"codec='topk_int8' composes int8 transport with a sparse "
+                f"selection, but fcfg.selection={fcfg.selection!r} keeps a "
+                f"dense/random payload — use codec='int8' instead")
         self.fcfg = dataclasses.replace(
             fcfg, combiner=spec.combine.combiner,
-            staleness_decay=spec.combine.staleness_decay)
+            staleness_decay=spec.combine.staleness_decay,
+            codec=comp.codec, error_feedback=comp.error_feedback,
+            codec_stochastic=comp.stochastic, stage_rows=comp.stage_rows)
         self.approach = resolve_approach(spec.approach)
         self.round = 0
         self.data_rng = np.random.default_rng(spec.seed)

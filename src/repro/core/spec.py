@@ -296,22 +296,91 @@ class BackendSpec:
                     f"{self.kind!r} backend pre-stages whole chunks")
 
 
+CODECS = ("none", "bf16", "int8", "topk_int8")
+_INT8_CODECS = ("int8", "topk_int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionSpec:
+    """How uploaded delta rows are encoded on the wire (the transport
+    codec applied AFTER the selection policy masks the row):
+
+    ``codec``          — ``none`` ships kept coordinates as float32
+                         (the pre-compression behavior, bitwise-pinned);
+                         ``bf16`` halves value bytes by a bfloat16 cast;
+                         ``int8`` quantizes per row with one absmax
+                         scale (4 bytes/coordinate -> 1 + 4 bytes/row);
+                         ``topk_int8`` is the composed sparse payload —
+                         int8 values + int32 indices for the kept
+                         coordinates of a sparse selection policy;
+    ``error_feedback`` — keep a per-user ``(U, N)`` float32 residual of
+                         what compression dropped and re-add it to that
+                         user's next delta (EF-SGD), so the lossy path
+                         converges like the dense one;
+    ``stochastic``     — unbiased stochastic rounding for the int8
+                         codecs (counter-hash driven, reproducible)
+                         instead of round-to-nearest;
+    ``stage_rows``     — also move the *state* rows compressed: host
+                         backends stage cohort D rows H2D/D2H as
+                         int8+scale and the SPMD sharded store crosses
+                         the mesh axis quantized (4x fewer collective
+                         bytes).  Lossy on state (no residual protects
+                         a state row), so off by default."""
+
+    codec: str = "none"
+    error_feedback: bool = True
+    stochastic: bool = False
+    stage_rows: bool = False
+
+    def __post_init__(self):
+        if self.codec not in CODECS:
+            raise ValueError(f"unknown codec {self.codec!r}; choose from "
+                             f"{CODECS}")
+        if self.stochastic and self.codec not in _INT8_CODECS:
+            raise ValueError(
+                f"stochastic rounding is an int8-codec knob (codec is "
+                f"{self.codec!r})")
+        if self.stage_rows and self.codec not in _INT8_CODECS:
+            raise ValueError(
+                f"stage_rows moves state rows as int8+scale and therefore "
+                f"needs an int8 codec (codec is {self.codec!r})")
+
+    @property
+    def lossy(self) -> bool:
+        return self.codec != "none"
+
+
 @dataclasses.dataclass(frozen=True)
 class CombineSpec:
     """How the server folds the cohort's uploads: a registered
     ``combiner`` (the paper's argmax-|.|, FedAvg mean, or the
     staleness-aware variants discounting by ``staleness_decay ** age``),
-    optionally with participation-adaptive per-member weights."""
+    optionally with participation-adaptive per-member weights.
+    ``compression`` describes the wire encoding of the uploaded rows
+    (see :class:`CompressionSpec`)."""
 
     combiner: str = "max_abs"
     staleness_decay: float = 0.5
     adaptive_server_scale: bool = False
+    compression: CompressionSpec = dataclasses.field(
+        default_factory=CompressionSpec)
 
     def __post_init__(self):
         resolve_combiner(self.combiner)  # raises on unknown
         if not (0.0 < float(self.staleness_decay) <= 1.0):
             raise ValueError(f"staleness_decay must be in (0, 1], got "
                              f"{self.staleness_decay!r}")
+        if isinstance(self.compression, dict):
+            # nested manifest section: from_dict only coerces top-level
+            # sections, so the combine section coerces its own child
+            object.__setattr__(
+                self, "compression",
+                _sub_spec(CompressionSpec, self.compression,
+                          "combine.compression"))
+        if not isinstance(self.compression, CompressionSpec):
+            raise ValueError(
+                f"compression must be a CompressionSpec or manifest dict, "
+                f"got {self.compression!r}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -544,6 +613,22 @@ class FederationSpec:
             raise ValueError(
                 "adaptive_server_scale is a combiner option for "
                 "delta-uploading approaches under cohort scheduling")
+        comp = self.combine.compression
+        if comp.codec != "none":
+            if not approach.uploads:
+                raise ValueError(
+                    f"compression codecs encode uploaded delta rows; "
+                    f"approach {self.approach!r} uploads nothing")
+            if comp.error_feedback and not self.cohort_virtual:
+                raise ValueError(
+                    "error feedback keeps a per-user residual row in the "
+                    "cohort store; run a cohort-virtualized configuration "
+                    "or set compression.error_feedback=False")
+        if comp.stage_rows and self.backend.kind not in ("host", "spmd"):
+            raise ValueError(
+                f"stage_rows compresses the host<->device / cross-mesh "
+                f"row movement; the {self.backend.kind!r} backend's store "
+                f"never leaves the device")
 
     @property
     def cohort_virtual(self) -> bool:

@@ -26,8 +26,8 @@ from jax.sharding import PartitionSpec as PS
 from repro.core import losses
 from repro.core.approaches import (DistGANConfig, DistGANState,
                                    d_flat_layout, d_opt_flat_layout)
-from repro.core.federated import (CohortStore, combine_max_abs_spmd,
-                                  combine_mean_spmd,
+from repro.core.federated import (CohortStore, codec_transport,
+                                  combine_max_abs_spmd, combine_mean_spmd,
                                   combine_shared_random_flat_spmd,
                                   select_delta_flat)
 from repro.optim import adamw, apply_updates
@@ -85,10 +85,23 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
     participation age, consumed only by the staleness-aware folds; the
     optional fourth, ``weight``, is this shard's scalar
     participation-adaptive combine weight (approach 1, non-shared_random
-    selections) — the SPMD analogue of the host bodies' ``weights``."""
+    selections) — the SPMD analogue of the host bodies' ``weights``; the
+    optional fifth, ``residual``, is this shard's (N,) error-feedback
+    residual, REQUIRED iff ``fcfg.codec != "none" and
+    fcfg.error_feedback`` — the body then returns a third element, the
+    updated residual (same EF-SGD order as the host approach1 body:
+    compensate -> select -> codec -> residual, weights after)."""
     g_opt_def, d_opt_def = _opts(fcfg)
     layout = d_flat_layout(pair)
     width = fcfg.num_users if width is None else width
+    lossy = fcfg.codec != "none"
+    ef = lossy and fcfg.error_feedback
+    if lossy:
+        assert approach == "approach1", \
+            "transport codecs compress approach 1's delta uploads"
+        assert fcfg.selection != "shared_random", \
+            "shared_random psums the fold before any per-member " \
+            "encoding — there is no per-user payload to compress"
 
     def local_d_update(d, opt, real, fake):
         def loss_fn(dp):
@@ -98,8 +111,14 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
         updates, opt = d_opt_def.update(grads, opt, d)
         return apply_updates(d, updates), opt, loss
 
-    def body(state: DistGANState, real, age=None, weight=None):
-        key, kz1, kz2, ksel = jax.random.split(state.key, 4)
+    def body(state: DistGANState, real, age=None, weight=None,
+             residual=None):
+        assert (residual is not None) == ef, \
+            "pass residual iff the config wants error feedback"
+        if lossy:
+            key, kz1, kz2, ksel, kq = jax.random.split(state.key, 5)
+        else:
+            key, kz1, kz2, ksel = jax.random.split(state.key, 4)
         B = real.shape[1]
         my_real = real[0]                     # this shard's private slice
         d = _unstack(state.ds)
@@ -114,6 +133,10 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
             # subtract, and the cross-user fold psums ONE buffer instead
             # of a tree of small leaves.
             delta = layout.flatten(d) - old_flat
+            if ef:
+                # EF-SGD: compensate BEFORE selection so entries dropped
+                # or rounded away re-enter future uploads
+                delta = delta + residual
             if fcfg.selection == "shared_random":
                 assert weight is None, \
                     "adaptive weights need per-user uploads (the shared_" \
@@ -125,6 +148,18 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
                 masked, kept = select_delta_flat(
                     delta, fcfg.selection, frac=fcfg.upload_frac, key=ksel,
                     use_kernel=fcfg.use_topk_kernel)
+                if lossy:
+                    seed = None
+                    if fcfg.codec_stochastic:
+                        seed = jax.random.randint(kq, (), 0, 2**31 - 1)
+                    masked = codec_transport(
+                        masked[None], fcfg.codec,
+                        stochastic=fcfg.codec_stochastic, seed=seed,
+                        use_kernel=fcfg.use_topk_kernel)[0]
+                if ef:
+                    # user-local ledger: what the wire dropped, BEFORE
+                    # any server-side weighting
+                    new_residual = delta - masked
                 if weight is not None:
                     # participation-adaptive combine weight, applied to
                     # this shard's upload BEFORE the cross-user fold
@@ -229,7 +264,10 @@ def make_spmd_body(pair, fcfg: DistGANConfig, approach: str,
         g = apply_updates(state.g, updates)
         new_state = DistGANState(g, g_opt, _restack(d), _restack(opt),
                                  server_d, state.step + 1, key)
-        return new_state, {"d_loss": dl[None], "g_loss": gl, **metrics}
+        metrics = {"d_loss": dl[None], "g_loss": gl, **metrics}
+        if ef:
+            return new_state, metrics, new_residual
+        return new_state, metrics
 
     return body
 
@@ -253,6 +291,8 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
     inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
+    ef = fcfg.codec != "none" and fcfg.error_feedback
+    stage_q = fcfg.stage_rows and fcfg.codec in ("int8", "topk_int8")
 
     def round_fn(carry: CohortState, inp):
         real, idx = inp            # per-shard blocks: (1, B, ...), (1,)
@@ -266,14 +306,35 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
             _restack(d_layout.unflatten(d_row)),
             _restack(o_layout.unflatten(o_row)),
             carry.server_d, carry.step, carry.key)
-        new_state, metrics = inner(state, real, age)
+        if ef:
+            new_state, metrics, new_res = inner(state, real, age,
+                                                residual=store.residual[u])
+        else:
+            new_state, metrics = inner(state, real, age)
+            new_res = None
 
         new_d = d_layout.flatten(_unstack(new_state.ds))
         new_o = o_layout.flatten(_unstack(new_state.d_opts))
         onehot = (jnp.zeros((store.num_users, 1), jnp.float32)
                   .at[u, 0].set(1.0))
         part = jax.lax.psum(onehot, AXIS)                    # (U, 1)
-        rows_d = jax.lax.psum(onehot * new_d[None], AXIS)    # (U, Nd)
+        if stage_q:
+            # stage_rows: the updated D row crosses the mesh axis as int8
+            # + one f32 scale — 4x fewer bytes than the dense f32 psum.
+            # Exactly one shard contributes a nonzero row per slot, so
+            # the int8 psum is a lossless select of the quantized row.
+            scale = jnp.max(jnp.abs(new_d)) / jnp.float32(127.0)
+            inv = jnp.where(scale > 0, jnp.float32(1.0) / scale,
+                            jnp.float32(0.0))
+            q = jnp.clip(jnp.round(new_d * inv), -127, 127).astype(jnp.int8)
+            hot = onehot > 0
+            q_rows = jax.lax.psum(jnp.where(hot, q[None], jnp.int8(0)),
+                                  AXIS)                      # (U, Nd) int8
+            scales = jax.lax.psum(
+                jnp.where(hot[:, 0], scale, 0.0), AXIS)      # (U,)
+            rows_d = q_rows.astype(jnp.float32) * scales[:, None]
+        else:
+            rows_d = jax.lax.psum(onehot * new_d[None], AXIS)  # (U, Nd)
         rows_o = jax.lax.psum(onehot * new_o[None], AXIS)    # (U, No)
         new_store = CohortStore(
             d_flat=jnp.where(part > 0, rows_d, store.d_flat),
@@ -282,7 +343,10 @@ def make_spmd_cohort_round(pair, fcfg: DistGANConfig, approach: str,
             # this round"; 0 = never), matching make_cohort_engine and
             # the streaming driver
             last_round=jnp.where(part[:, 0] > 0, carry.step + 1,
-                                 store.last_round))
+                                 store.last_round),
+            residual=(None if new_res is None else jnp.where(
+                part > 0, jax.lax.psum(onehot * new_res[None], AXIS),
+                store.residual)))
         new_carry = CohortState(new_state.g, new_state.g_opt, new_store,
                                 new_state.server_d, new_state.step,
                                 new_state.key)
@@ -323,6 +387,8 @@ def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
     inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
+    ef = fcfg.codec != "none" and fcfg.error_feedback
+    stage_q = fcfg.stage_rows and fcfg.codec in ("int8", "topk_int8")
 
     def round_fn(carry: CohortState, inp):
         real, idx = inp            # per-shard blocks: (1, B, ...), (1,)
@@ -341,7 +407,25 @@ def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
             return (jax.lax.bitcast_convert_type(rows, jnp.float32)
                     if f32 else rows)
 
-        rows_d = gather(store.d_flat, True)          # (C, Nd) replicated
+        def gather_q(local):
+            # stage_rows gather: the owner quantizes its row before the
+            # one-hot psum — int8 payload + one f32 scale per row crosses
+            # the axis instead of the dense f32 row.  Exactly one shard
+            # contributes per slot, so the psum is a lossless select of
+            # the (lossy) quantized row.
+            rows = local[loc]                            # (C, N) owned rows
+            scale = (jnp.max(jnp.abs(rows), axis=1)
+                     / jnp.float32(127.0))               # (C,)
+            inv = jnp.where(scale > 0, jnp.float32(1.0) / scale,
+                            jnp.float32(0.0))
+            q = jnp.clip(jnp.round(rows * inv[:, None]),
+                         -127, 127).astype(jnp.int8)
+            q = jax.lax.psum(jnp.where(own[:, None], q, jnp.int8(0)), AXIS)
+            s = jax.lax.psum(jnp.where(own, scale, 0.0), AXIS)
+            return q.astype(jnp.float32) * s[:, None]
+
+        rows_d = (gather_q(store.d_flat) if stage_q
+                  else gather(store.d_flat, True))   # (C, Nd) replicated
         rows_o = gather(store.opt_flat, True)
         last = gather(store.last_round, False)       # (C,)
         age = carry.step - last[me]
@@ -350,7 +434,17 @@ def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
             _restack(d_layout.unflatten(rows_d[me])),
             _restack(o_layout.unflatten(rows_o[me])),
             carry.server_d, carry.step, carry.key)
-        new_state, metrics = inner(state, real, age)
+        if ef:
+            # the EF residual shards with the store and rides the same
+            # one-hot transport, always exact f32 (it is the ledger that
+            # corrects the lossy transports — quantizing it would break
+            # the compensation invariant)
+            rows_r = gather(store.residual, True)
+            new_state, metrics, new_res = inner(state, real, age,
+                                                residual=rows_r[me])
+        else:
+            new_state, metrics = inner(state, real, age)
+            new_res = None
 
         new_d = d_layout.flatten(_unstack(new_state.ds))
         new_o = o_layout.flatten(_unstack(new_state.d_opts))
@@ -364,7 +458,20 @@ def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
             return (jax.lax.bitcast_convert_type(out, jnp.float32)
                     if f32 else out)
 
-        all_nd = bcast(new_d, True)                  # (C, Nd) replicated
+        def bcast_q(row):
+            # stage_rows scatter: broadcast the updated row int8 + scale
+            scale = jnp.max(jnp.abs(row)) / jnp.float32(127.0)
+            inv = jnp.where(scale > 0, jnp.float32(1.0) / scale,
+                            jnp.float32(0.0))
+            q = jnp.clip(jnp.round(row * inv), -127, 127).astype(jnp.int8)
+            qc = jnp.zeros((C,) + q.shape, jnp.int8).at[me].set(q)
+            sc = jnp.zeros((C,), jnp.float32).at[me].set(scale)
+            q_all = jax.lax.psum(qc, AXIS)
+            s_all = jax.lax.psum(sc, AXIS)
+            return q_all.astype(jnp.float32) * s_all[:, None]
+
+        all_nd = (bcast_q(new_d) if stage_q
+                  else bcast(new_d, True))           # (C, Nd) replicated
         all_no = bcast(new_o, True)
         sel = jnp.where(own, loc, Ul)     # Ul is out of range -> dropped
         new_store = CohortStore(
@@ -372,7 +479,10 @@ def make_spmd_fused_store_round(pair, fcfg: DistGANConfig, approach: str,
             opt_flat=store.opt_flat.at[sel].set(all_no, mode="drop"),
             # same re-zeroed age convention as make_spmd_cohort_round
             last_round=store.last_round.at[sel].set(carry.step + 1,
-                                                    mode="drop"))
+                                                    mode="drop"),
+            residual=(None if new_res is None else
+                      store.residual.at[sel].set(bcast(new_res, True),
+                                                 mode="drop")))
         new_carry = CohortState(new_state.g, new_state.g_opt, new_store,
                                 new_state.server_d, new_state.step,
                                 new_state.key)
@@ -410,6 +520,53 @@ def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
     inner = make_spmd_body(pair, fcfg, approach, width=cohort_size)
     d_layout = d_flat_layout(pair)
     o_layout = d_opt_flat_layout(pair, fcfg)
+    ef = fcfg.codec != "none" and fcfg.error_feedback
+
+    def _specs(shared, wts):
+        rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
+        shared_specs = CohortShared(
+            g=rep(shared.g), g_opt=rep(shared.g_opt),
+            server_d=rep(shared.server_d), step=PS(), key=PS())
+        metric_specs = {"d_loss": PS(AXIS), "g_loss": PS(),
+                        "kept_frac": PS(), "mean_age": PS()}
+        w_spec = None if wts is None else PS(AXIS)
+        return shared_specs, metric_specs, w_spec
+
+    if ef:
+        # EF variant: the residual rows stream through the mesh exactly
+        # like the d/opt rows — same signature as the host rows engine's
+        # EF form, so stream_cohort_rounds drives both identically
+        def round_fn_ef(shared: "CohortShared", d_rows, o_rows, res_rows,
+                        ages, wts, real):
+            state = DistGANState(
+                shared.g, shared.g_opt,
+                _restack(d_layout.unflatten(d_rows[0])),
+                _restack(o_layout.unflatten(o_rows[0])),
+                shared.server_d, shared.step, shared.key)
+            w = None if wts is None else wts[0]
+            new_state, metrics, new_res = inner(state, real, ages[0], w,
+                                                residual=res_rows[0])
+            new_shared = CohortShared(new_state.g, new_state.g_opt,
+                                      new_state.server_d, new_state.step,
+                                      new_state.key)
+            nd = d_layout.flatten(_unstack(new_state.ds))[None]
+            no = o_layout.flatten(_unstack(new_state.d_opts))[None]
+            C = jnp.float32(cohort_size)
+            metrics = dict(metrics, mean_age=jax.lax.psum(
+                ages[0].astype(jnp.float32), AXIS) / C)
+            return new_shared, nd, no, new_res[None], metrics
+
+        def step_ef(shared, d_rows, o_rows, res_rows, ages, wts, real):
+            shared_specs, metric_specs, w_spec = _specs(shared, wts)
+            fn = shard_map_compat(
+                round_fn_ef, mesh,
+                in_specs=(shared_specs, PS(AXIS), PS(AXIS), PS(AXIS),
+                          PS(AXIS), w_spec, PS(AXIS)),
+                out_specs=(shared_specs, PS(AXIS), PS(AXIS), PS(AXIS),
+                           metric_specs))
+            return fn(shared, d_rows, o_rows, res_rows, ages, wts, real)
+
+        return jax.jit(step_ef, donate_argnums=(0, 1, 2, 3))
 
     def round_fn(shared: "CohortShared", d_rows, o_rows, ages, wts, real):
         # per-shard blocks: d_rows (1, Nd), o_rows (1, No), ages (1,),
@@ -432,13 +589,7 @@ def make_spmd_cohort_rows_engine(pair, fcfg: DistGANConfig, mesh,
         return new_shared, nd, no, metrics
 
     def step(shared, d_rows, o_rows, ages, wts, real):
-        rep = lambda tree: jax.tree.map(lambda _: PS(), tree)
-        shared_specs = CohortShared(
-            g=rep(shared.g), g_opt=rep(shared.g_opt),
-            server_d=rep(shared.server_d), step=PS(), key=PS())
-        metric_specs = {"d_loss": PS(AXIS), "g_loss": PS(),
-                        "kept_frac": PS(), "mean_age": PS()}
-        w_spec = None if wts is None else PS(AXIS)
+        shared_specs, metric_specs, w_spec = _specs(shared, wts)
         fn = shard_map_compat(
             round_fn, mesh,
             in_specs=(shared_specs, PS(AXIS), PS(AXIS), PS(AXIS), w_spec,

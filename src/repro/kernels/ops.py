@@ -14,6 +14,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.quantize import (dequantize_rows_pallas,
+                                    quantize_rows_pallas)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 from repro.kernels.topk_select import (topk_mask_pallas,
                                        topk_mask_pallas_global)
@@ -33,6 +35,21 @@ def topk_mask(x: jnp.ndarray, frac: float,
     if mode == "global":
         return topk_mask_pallas_global(x, frac, interpret=_interpret())
     return topk_mask_pallas(x, frac, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("stochastic",))
+def quantize_rows(x: jnp.ndarray, *, stochastic: bool = False, seed=None):
+    """Per-row absmax int8 quantization of stacked rows (R, N) ->
+    ``(q int8, scale f32 (R,))``.  ``seed`` (traced int32) is consumed
+    only by the stochastic-rounding variant."""
+    return quantize_rows_pallas(x, stochastic=stochastic, seed=seed,
+                                interpret=_interpret())
+
+
+@jax.jit
+def dequantize_rows(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse transport map: int8 rows x per-row scale -> f32 rows."""
+    return dequantize_rows_pallas(q, scale, interpret=_interpret())
 
 
 @functools.partial(jax.jit,

@@ -8,7 +8,37 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.quantize import _hash_u01
 from repro.kernels.topk_select import BLOCK
+
+
+def quantize_rows_ref(x: jnp.ndarray, *, stochastic: bool = False,
+                      seed=None):
+    """Per-row absmax int8 oracle matching quantize_rows_pallas bitwise:
+    ``scale[r] = max|x[r]| / 127``, ``q = clip(round(x / scale))``.  The
+    stochastic variant shares the kernel's counter hash, so even the
+    random rounding decisions are bit-identical."""
+    x = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(x), axis=1) / jnp.float32(127.0)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0).astype(jnp.float32)
+    y = x * inv[:, None]
+    if stochastic:
+        assert seed is not None, "stochastic rounding needs a seed"
+        y = jnp.clip(y, -127.0, 127.0)
+        f = jnp.floor(y)
+        rows = jnp.broadcast_to(
+            jnp.arange(x.shape[0], dtype=jnp.int32)[:, None], x.shape)
+        cols = jnp.broadcast_to(
+            jnp.arange(x.shape[1], dtype=jnp.int32)[None, :], x.shape)
+        u = _hash_u01(rows, cols, jnp.asarray(seed, jnp.int32))
+        q = f + (u < (y - f)).astype(jnp.float32)
+        return jnp.clip(q, -127.0, 127.0).astype(jnp.int8), scale
+    return jnp.clip(jnp.round(y), -127.0, 127.0).astype(jnp.int8), scale
+
+
+def dequantize_rows_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for dequantize_rows_pallas: ``q * scale[r]``."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[:, None]
 
 
 def topk_mask_global_ref(x: jnp.ndarray, frac: float) -> jnp.ndarray:

@@ -1,0 +1,349 @@
+"""Compressed delta transport: quantize kernel/ref parity, codec
+round-trip error bounds, error-feedback accumulation across session
+windowing, codec="none" structural no-op pins, and EF residual
+checkpoint/restore.  The byte-accounting assertions live in
+tests/test_cohort.py; the SPMD mesh variants in the subprocess test at
+the bottom (multi-device via --xla_force_host_platform_device_count)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.approaches import DistGANConfig
+from repro.core.federated import codec_transport
+from repro.core.gan import MLPGanConfig, make_mlp_pair
+from repro.core.session import FederationSession
+from repro.core.spec import (BackendSpec, CombineSpec, CompressionSpec,
+                             EngineSpec, FederationSpec, ParticipationSpec)
+from repro.data.federated import FederatedDataset
+from repro.data.mixtures import make_user_domains
+from repro.kernels.quantize import dequantize_rows_pallas, quantize_rows_pallas
+from repro.kernels.ref import dequantize_rows_ref, quantize_rows_ref
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                  d_hidden=32))
+
+
+def _rows(r=4, n=1000, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=0.1, size=(r, n)).astype(np.float32)
+    x[1, :n // 2] = 0.0          # half-sparse row
+    x[2] = 0.0                   # all-zero row (scale 0 path)
+    return jnp.asarray(x)
+
+
+# ---------------------------------------------------------------------------
+# quantize kernel vs reference oracle
+# ---------------------------------------------------------------------------
+
+def test_quantize_kernel_matches_ref_bitwise_eager():
+    """Eager pallas (interpret) vs eager jnp ref run the identical op
+    sequence: BITWISE on q, scale, and the dequantized rows — for both
+    rounding modes (under jit, XLA's div-by-constant rewrite costs the
+    scale 1 ULP; that contract is the jitted test below)."""
+    x = _rows()
+    for stochastic in (False, True):
+        seed = jnp.int32(123) if stochastic else None
+        qk, sk = quantize_rows_pallas(x, stochastic=stochastic, seed=seed)
+        qr, sr = quantize_rows_ref(x, stochastic=stochastic, seed=seed)
+        np.testing.assert_array_equal(np.asarray(qk), np.asarray(qr))
+        np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+        np.testing.assert_array_equal(
+            np.asarray(dequantize_rows_pallas(qk, sk)),
+            np.asarray(dequantize_rows_ref(qr, sr)))
+
+
+def test_quantize_jitted_ops_within_ulp_of_ref():
+    """The jitted public wrapper may differ from the eager ref by XLA's
+    division rewrite: scale within rtol 1e-6, codes within one step."""
+    from repro.kernels.ops import dequantize_rows, quantize_rows
+
+    x = _rows(seed=3)
+    qj, sj = quantize_rows(x)
+    qr, sr = quantize_rows_ref(x)
+    np.testing.assert_allclose(np.asarray(sj), np.asarray(sr), rtol=1e-6)
+    assert np.max(np.abs(np.asarray(qj, np.int32)
+                         - np.asarray(qr, np.int32))) <= 1
+    np.testing.assert_allclose(np.asarray(dequantize_rows(qj, sj)),
+                               np.asarray(dequantize_rows_ref(qr, sr)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_quantize_round_trip_error_bound():
+    """|x - deq(q(x))| <= scale/2 everywhere (deterministic rounding),
+    <= scale for stochastic; zero rows reconstruct exactly."""
+    x = _rows(seed=5)
+    scale = np.abs(np.asarray(x)).max(axis=1) / 127.0
+    for stochastic, bound in ((False, 0.5), (True, 1.0)):
+        seed = jnp.int32(9) if stochastic else None
+        q, s = quantize_rows_ref(x, stochastic=stochastic, seed=seed)
+        err = np.abs(np.asarray(dequantize_rows_ref(q, s)) - np.asarray(x))
+        assert np.all(err <= bound * scale[:, None] + 1e-12)
+    np.testing.assert_array_equal(
+        np.asarray(dequantize_rows_ref(*quantize_rows_ref(x))[2]),
+        np.zeros(x.shape[1], np.float32))
+
+
+def test_stochastic_rounding_is_seeded_and_unbiased():
+    # every element maps to the fractional code 0.635 except the absmax
+    # pin, so deterministic rounding would write 1 everywhere while
+    # stochastic rounding draws Bernoulli(0.635) between 0 and 1
+    x = np.full((1, 4096), 0.635 / 127.0, np.float32)
+    x[0, 0] = 1.0
+    x = jnp.asarray(x)
+    q1, s1 = quantize_rows_ref(x, stochastic=True, seed=jnp.int32(1))
+    q2, _ = quantize_rows_ref(x, stochastic=True, seed=jnp.int32(2))
+    q1b, _ = quantize_rows_ref(x, stochastic=True, seed=jnp.int32(1))
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q1b))
+    assert np.any(np.asarray(q1) != np.asarray(q2))
+    assert set(np.unique(np.asarray(q1)[0, 1:])) == {0, 1}
+    # the Bernoulli mean tracks the fractional part (unbiasedness):
+    # E[q] = 0.635, sample mean within 5 sigma of it
+    frac = float(np.asarray(q1, np.float64)[0, 1:].mean())
+    assert abs(frac - 0.635) < 5 * np.sqrt(0.635 * 0.365 / 4095)
+
+
+def test_codec_transport_round_trips():
+    x = _rows(seed=11)
+    np.testing.assert_array_equal(np.asarray(codec_transport(x, "none")),
+                                  np.asarray(x))
+    bf = np.asarray(codec_transport(x, "bf16"))
+    np.testing.assert_allclose(bf, np.asarray(x), rtol=8e-3)
+    for codec in ("int8", "topk_int8"):
+        for use_kernel in (False, True):
+            deq = np.asarray(codec_transport(x, codec,
+                                             use_kernel=use_kernel))
+            scale = np.abs(np.asarray(x)).max(axis=1, keepdims=True) / 127
+            assert np.all(np.abs(deq - np.asarray(x)) <= 0.5 * scale + 1e-12)
+    with pytest.raises(ValueError):
+        codec_transport(x, "int4")
+
+
+# ---------------------------------------------------------------------------
+# session-level: EF accumulation, windowing, codec="none" pins
+# ---------------------------------------------------------------------------
+
+def _ds(num_users):
+    users, union = make_user_domains(num_users, 2, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample,
+                            {"shard_sizes": [100] * num_users})
+
+
+def _spec(backend, compression, rpj=4, C=2):
+    return FederationSpec(
+        approach="approach1", batch_size=16, seed=0, eval_samples=0,
+        engine=EngineSpec(kind="fused", rounds_per_jit=rpj),
+        participation=ParticipationSpec("uniform", cohort_size=C),
+        backend=BackendSpec(backend),
+        combine=CombineSpec(combiner="max_abs", compression=compression))
+
+
+U = 6
+FCFG = DistGANConfig(num_users=U, use_topk_kernel=False)
+
+
+def _residual_of(sess):
+    drv = sess._driver
+    if hasattr(drv, "backend"):
+        return np.asarray(drv.backend.residual)
+    return np.asarray(drv._state.store.residual)
+
+
+@pytest.mark.parametrize("backend", ["device", "host"])
+def test_ef_accumulation_invariant_to_windowing(backend):
+    """run(5); run(6) == run(11) bitwise with codec="int8" — the EF
+    residual is part of the carried state, so windowing must neither
+    drop nor double-count it (the compiled program is shared because
+    every chunk pads to rounds_per_jit)."""
+    ds = _ds(U)
+    comp = CompressionSpec(codec="int8")
+    sa = FederationSession(PAIR, FCFG, ds, _spec(backend, comp))
+    ra = np.concatenate([sa.run(5).g_losses, sa.run(6).g_losses])
+    sb = FederationSession(PAIR, FCFG, ds, _spec(backend, comp))
+    rb = sb.run(11).g_losses
+    np.testing.assert_array_equal(ra, rb)
+    np.testing.assert_array_equal(_residual_of(sa), _residual_of(sb))
+    assert np.abs(_residual_of(sa)).sum() > 0  # EF actually accumulated
+
+
+@pytest.mark.parametrize("backend", ["device", "host"])
+def test_codec_none_is_structurally_pre_compression(backend):
+    """codec="none" must trace the EXACT pre-compression program: same
+    trajectory as a spec with the default CompressionSpec and NO
+    residual state anywhere."""
+    ds = _ds(U)
+    sa = FederationSession(PAIR, FCFG, ds,
+                           _spec(backend, CompressionSpec(codec="none")))
+    sb = FederationSession(PAIR, FCFG, ds,
+                           _spec(backend, CompressionSpec()))
+    np.testing.assert_array_equal(sa.run(8).g_losses, sb.run(8).g_losses)
+    drv = sa._driver
+    if hasattr(drv, "backend"):
+        assert not drv.backend.has_residual
+    else:
+        assert drv._state.store.residual is None
+
+
+def test_ef_residual_checkpoints_bitwise(tmp_path):
+    """save/restore round-trips the residual bitwise and the restored
+    session continues the EXACT trajectory (host backend; the device
+    carry pin is tests/test_spec.py's resume test, whose store pytree
+    now carries the residual leaf when EF is on)."""
+    ds = _ds(U)
+    comp = CompressionSpec(codec="int8")
+    sa = FederationSession(PAIR, FCFG, ds, _spec("host", comp))
+    sa.run(5)
+    path = str(tmp_path / "ckpt")
+    sa.save(path)
+    sb = FederationSession.restore(path, PAIR, FCFG, ds)
+    np.testing.assert_array_equal(_residual_of(sa), _residual_of(sb))
+    np.testing.assert_array_equal(sa.run(4).g_losses, sb.run(4).g_losses)
+    np.testing.assert_array_equal(_residual_of(sa), _residual_of(sb))
+
+
+def test_ef_device_checkpoint_and_fused_store_windowing(tmp_path):
+    """Device-backend EF: the residual rides the CohortStore pytree
+    through save/restore; fuse_store_rounds (donated window) matches the
+    per-chunk cohort engine at f32 tolerance as for d rows."""
+    ds = _ds(U)
+    comp = CompressionSpec(codec="int8")
+    sa = FederationSession(PAIR, FCFG, ds, _spec("device", comp))
+    sa.run(6)
+    path = str(tmp_path / "ckpt")
+    sa.save(path)
+    sb = FederationSession.restore(path, PAIR, FCFG, ds)
+    np.testing.assert_array_equal(_residual_of(sa), _residual_of(sb))
+    np.testing.assert_array_equal(sa.run(4).g_losses, sb.run(4).g_losses)
+
+
+def test_host_fused_store_ef_matches_per_round_stream():
+    """The superbatch window forwards the residual through the same src
+    plan as the d rows, so fused-store EF == per-round-stream EF
+    bitwise (same compiled body per round, same bytes)."""
+    ds = _ds(U)
+    comp = CompressionSpec(codec="int8")
+    spec_fused = FederationSpec(
+        approach="approach1", batch_size=16, seed=0, eval_samples=0,
+        engine=EngineSpec(kind="fused", rounds_per_jit=4,
+                          fuse_store_rounds=True),
+        participation=ParticipationSpec("uniform", cohort_size=2),
+        backend=BackendSpec("host"),
+        combine=CombineSpec(combiner="max_abs", compression=comp))
+    sa = FederationSession(PAIR, FCFG, ds, spec_fused)
+    ra = sa.run(10)
+    assert ra.extra["fused_store"]
+    sb = FederationSession(PAIR, FCFG, ds, _spec("host", comp))
+    rb = sb.run(10)
+    np.testing.assert_allclose(ra.g_losses, rb.g_losses,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(_residual_of(sa), _residual_of(sb),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_stage_rows_runs_and_reports():
+    ds = _ds(U)
+    comp = CompressionSpec(codec="int8", stage_rows=True)
+    sess = FederationSession(PAIR, FCFG, ds, _spec("host", comp))
+    r = sess.run(6)
+    assert np.all(np.isfinite(r.g_losses))
+    assert r.extra["compression"]["stage_rows"]
+    assert not r.extra["fused_store"]  # stage_rows forces per-round stream
+
+
+def test_compression_spec_validation():
+    with pytest.raises(ValueError):
+        CompressionSpec(codec="int4")
+    with pytest.raises(ValueError):
+        CompressionSpec(codec="bf16", stochastic=True)
+    with pytest.raises(ValueError):
+        CompressionSpec(codec="bf16", stage_rows=True)
+    # lossy codec on a non-uploading approach
+    with pytest.raises(ValueError):
+        FederationSpec(
+            approach="approach2",
+            participation=ParticipationSpec("uniform", cohort_size=2),
+            combine=CombineSpec(
+                compression=CompressionSpec(codec="int8"))).validate_against(U)
+    # EF needs a cohort store to keep the residual rows in
+    with pytest.raises(ValueError):
+        FederationSpec(
+            approach="approach1",
+            combine=CombineSpec(
+                compression=CompressionSpec(codec="int8"))).validate_against(U)
+    # topk_int8 needs a sparse selection (session-level check)
+    with pytest.raises(ValueError):
+        FederationSession(
+            PAIR, DistGANConfig(num_users=U, selection="none"), _ds(U),
+            _spec("device", CompressionSpec(codec="topk_int8")))
+    # manifest round-trip keeps the compression section
+    spec = _spec("host", CompressionSpec(codec="topk_int8",
+                                         stochastic=True))
+    spec2 = FederationSpec.from_dict(spec.to_dict())
+    assert spec2.combine.compression == spec.combine.compression
+
+
+# ---------------------------------------------------------------------------
+# SPMD (subprocess: forces a 2-device host platform)
+# ---------------------------------------------------------------------------
+
+def test_spmd_codec_none_pin_and_ef_invariance():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np, jax
+        from repro.core.approaches import DistGANConfig
+        from repro.core.gan import MLPGanConfig, make_mlp_pair
+        from repro.core.session import FederationSession
+        from repro.core.spec import (BackendSpec, CombineSpec,
+                                     CompressionSpec, EngineSpec,
+                                     FederationSpec, ParticipationSpec)
+        from repro.data.federated import FederatedDataset
+        from repro.data.mixtures import make_user_domains
+        from repro.launch.mesh import make_users_mesh
+        import repro.core.spmd  # registers the backend
+
+        PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=32,
+                                          d_hidden=32))
+        U, C = 6, 2
+        users, union = make_user_domains(U, 2, 1.0)
+        ds = FederatedDataset([u.sample for u in users], union.sample,
+                              {"shard_sizes": [100] * U})
+        fcfg = DistGANConfig(num_users=U, use_topk_kernel=False)
+        mesh = make_users_mesh(C)
+
+        def mk(comp):
+            spec = FederationSpec(
+                approach="approach1", batch_size=16, seed=0, eval_samples=0,
+                engine=EngineSpec(kind="fused", rounds_per_jit=4),
+                participation=ParticipationSpec("uniform", cohort_size=C),
+                backend=BackendSpec("spmd"),
+                combine=CombineSpec(combiner="max_abs", compression=comp))
+            return FederationSession(PAIR, fcfg, ds, spec, mesh=mesh)
+
+        # codec="none" == default CompressionSpec, bitwise
+        ra = mk(CompressionSpec(codec="none")).run(6).g_losses
+        rb = mk(CompressionSpec()).run(6).g_losses
+        np.testing.assert_array_equal(ra, rb)
+
+        # EF windowing invariance across the mesh
+        sa = mk(CompressionSpec(codec="int8"))
+        ga = np.concatenate([sa.run(3).g_losses, sa.run(4).g_losses])
+        sb = mk(CompressionSpec(codec="int8"))
+        gb = sb.run(7).g_losses
+        np.testing.assert_array_equal(ga, gb)
+        np.testing.assert_array_equal(sa._driver.backend.residual,
+                                      sb._driver.backend.residual)
+        assert np.abs(sa._driver.backend.residual).sum() > 0
+        print("SPMD COMPRESS OK")
+    """)], capture_output=True, text=True, env=env, timeout=560)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "SPMD COMPRESS OK" in r.stdout

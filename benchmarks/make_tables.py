@@ -13,6 +13,8 @@ import os
 ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_distgan.json")
+ANALYSIS_JSON = os.path.join(os.path.dirname(__file__), "..",
+                             "ANALYSIS_distgan.json")
 
 SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 ARCHS = ["mamba2-780m", "seamless-m4t-medium", "recurrentgemma-9b",
@@ -130,10 +132,40 @@ def bench_md(payload) -> str:
     return "\n".join(lines)
 
 
+def analysis_md() -> str:
+    """ANALYSIS_distgan.json (``python -m repro.analysis --json --out``)
+    -> per-rule violation counts plus the coverage footer.  A missing
+    artifact renders as missing — a silent empty table would read as a
+    clean run."""
+    if not os.path.exists(ANALYSIS_JSON):
+        return ("(no ANALYSIS_distgan.json — run PYTHONPATH=src python -m "
+                "repro.analysis --json --out ANALYSIS_distgan.json)")
+    with open(ANALYSIS_JSON) as fh:
+        payload = json.load(fh)
+    counts: dict = {}
+    for v in payload.get("violations", []):
+        counts[v["rule"]] = counts.get(v["rule"], 0) + 1
+    lines = [f"status: {'CLEAN' if payload.get('ok') else 'VIOLATIONS'}", ""]
+    lines += ["| rule | violations |", "|---|---|"]
+    if counts:
+        lines += [f"| {r} | {counts[r]} |" for r in sorted(counts)]
+    else:
+        lines.append("| (all rules) | 0 |")
+    checked = payload.get("checked", {})
+    lines += [""] + [f"- `{k}`: {checked[k]}" for k in sorted(checked)]
+    return "\n".join(lines)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--which", default="all")
     args = ap.parse_args()
+    if args.which in ("all", "analysis"):
+        print("## Static contracts (ANALYSIS_distgan.json)\n")
+        print(analysis_md())
+        print()
+        if args.which == "analysis":
+            return
     if args.which in ("all", "bench"):
         print("## Benchmark artifact (BENCH_distgan.json)\n")
         if os.path.exists(BENCH_JSON):

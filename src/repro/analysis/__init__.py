@@ -1,0 +1,82 @@
+"""Static contract checking for the reproduction (``python -m
+repro.analysis``).
+
+Every guarantee this codebase makes — bitwise-pinned trajectories across
+the device/host/SPMD backends, donated ``(U, N)`` stores that are never
+silently copied, a bounded compiled-program count in the serve ladders —
+was enforced only by runtime test pins until PR 9, and one silent
+corruption bug (the ``jnp.asarray`` host-buffer aliasing bug, PR 6)
+shipped in exactly this class.  This package proves the contracts at
+trace/compile/parse time, in two passes:
+
+* **Pass 1 — trace contracts** (:mod:`repro.analysis.tracecheck`):
+  lowers every registered backend×approach engine (enumerated via the
+  PR 4 registries through ``core.engine.trace_specimens`` /
+  ``core.spmd.spmd_trace_specimens``) plus the serve/decode programs and
+  inspects the jaxpr + lowered module: donation honored (each donated
+  buffer ALIASED in the input/output aliasing map, not just marked),
+  no host callbacks, no f64 promotion inside scan bodies, the
+  ``_pin`` optimization barriers present, and the bucket ladders'
+  compiled-program counts within their static bounds.
+* **Pass 2 — repo-invariant lint** (:mod:`repro.analysis.lint`): named
+  AST rules RPR001–RPR006 over the source tree, with per-line
+  ``# repro: allow(RPRxxx): why`` waivers.
+
+The CLI exits non-zero on any violation and runs as a blocking CI job
+(see ``.github/workflows/ci.yml`` and the invariant→rule table in
+EXPERIMENTS.md §"Static contracts").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    """One broken contract: ``rule`` names what fired (RPRxxx for lint,
+    TRCxxx for trace checks), ``where`` locates it (``path:line`` for
+    lint, the specimen/program name for trace checks)."""
+
+    rule: str
+    where: str
+    message: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def render_report(violations, checked: dict) -> str:
+    """Human-readable report: one line per violation, grouped by rule,
+    plus the coverage footer (what was actually checked — a clean run
+    over nothing must not read as a clean run)."""
+    lines = []
+    if violations:
+        lines.append(f"repro.analysis: {len(violations)} violation(s)")
+        by_rule: dict[str, list[Violation]] = {}
+        for v in violations:
+            by_rule.setdefault(v.rule, []).append(v)
+        for rule in sorted(by_rule):
+            for v in by_rule[rule]:
+                lines.append(f"  {rule}  {v.where}  {v.message}")
+    else:
+        lines.append("repro.analysis: clean")
+    for k in sorted(checked):
+        lines.append(f"  [checked] {k}: {checked[k]}")
+    return "\n".join(lines)
+
+
+def render_json(violations, checked: dict) -> str:
+    return json.dumps({
+        "ok": not violations,
+        "violations": [v.to_dict() for v in violations],
+        "checked": checked,
+    }, indent=2, sort_keys=True)
+
+
+def rule_counts(violations) -> dict[str, int]:
+    out: dict[str, int] = {}
+    for v in violations:
+        out[v.rule] = out.get(v.rule, 0) + 1
+    return out

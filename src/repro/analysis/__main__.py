@@ -1,0 +1,69 @@
+"""CLI for the static contract checker: ``python -m repro.analysis``.
+
+Exits 0 when the tree is clean, 1 when any contract is violated (the
+report names each rule).  ``--json`` emits the machine-readable report
+consumed by CI and ``benchmarks/make_tables.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_multi_device() -> None:
+    """Give XLA 2 CPU devices so the SPMD trace leg runs (must happen
+    before jax is imported anywhere in this process)."""
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=2").strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="two-pass static contract checker "
+                    "(trace contracts + repo-invariant lint)")
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to lint (default: repo source targets)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit machine-readable JSON report")
+    ap.add_argument("--skip-trace", action="store_true",
+                    help="skip Pass 1 (jaxpr/HLO trace contracts)")
+    ap.add_argument("--skip-lint", action="store_true",
+                    help="skip Pass 2 (AST lint)")
+    ap.add_argument("--no-decode", action="store_true",
+                    help="skip the decode-engine ladder check (slowest leg)")
+    ap.add_argument("--out", help="also write the JSON report to this path")
+    args = ap.parse_args(argv)
+
+    violations, checked = [], {}
+
+    if not args.skip_lint:
+        from repro.analysis.lint import run_lint
+        lv, lc = run_lint(paths=args.paths or None)
+        violations.extend(lv)
+        checked.update(lc)
+
+    if not args.skip_trace:
+        _force_multi_device()
+        from repro.analysis.tracecheck import run_tracecheck
+        tv, tc = run_tracecheck(decode=not args.no_decode)
+        violations.extend(tv)
+        checked.update(tc)
+
+    from repro.analysis import render_json, render_report
+    if args.out:
+        with open(args.out, "w", encoding="utf-8") as fh:
+            fh.write(render_json(violations, checked) + "\n")
+    print(render_json(violations, checked) if args.json
+          else render_report(violations, checked))
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

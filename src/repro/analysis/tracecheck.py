@@ -1,0 +1,354 @@
+"""Pass 1 — trace contracts.
+
+Lowers every registered backend×approach engine program (enumerated via
+the PR 4 registries through the ``trace_specimens`` introspection hooks
+in ``core.engine`` / ``core.spmd``) plus the serve sampler and LM decode
+ladders, and inspects the closed jaxpr and lowered StableHLO:
+
+* **TRC001 donation honored** — every leaf of a ``donate_argnums`` arg
+  must be ALIASED in the lowered module's input/output aliasing map
+  (``tf.aliasing_output``).  A donated-but-unaliasable buffer lowers to
+  the ``jax.buffer_donor`` attribute instead — that is the
+  "donated but copied" regression class that would silently break the
+  PR 7 in-place scatter contract — and an engine whose factory
+  deliberately does NOT donate (the cohort bitwise-pin copies) must show
+  no aliasing at all.  One representative per donation class is
+  additionally compiled and its executable's ``input_output_alias``
+  header asserted, tying the check to the artifact XLA actually runs.
+* **TRC002 no host callbacks** — ``pure_callback`` / ``io_callback`` /
+  ``debug_callback`` primitives anywhere in an engine program (a
+  callback inside a fused scan serializes every round on the host).
+* **TRC003 dtype discipline** — no float64/complex128 values and no
+  conversions INTO them anywhere in the program (an implicit weak-type
+  promotion under ``JAX_ENABLE_X64`` doubles every buffer and breaks
+  the bitwise pins).
+* **TRC004 barrier pins / program shape** — the ``_pin``
+  optimization-barrier clusters each engine's bitwise trajectory pin
+  depends on (PR 2) are present, and scan-fused engines actually
+  contain a scan.
+* **TRC005 program-count bounds** — the serve bucket ladder compiles at
+  most ``len(buckets)`` programs per family and the decode engine at
+  most ``len(buckets) + 1`` total, driven over every bucket.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+import jax
+
+from repro.analysis import Violation
+
+# donated-and-aliased args carry tf.aliasing_output in the lowered
+# module; donated-but-NOT-aliasable args carry jax.buffer_donor (the
+# runtime then copies — exactly the regression TRC001 exists to catch)
+_ALIASED_RE = re.compile(r"tf\.aliasing_output")
+_DONOR_RE = re.compile(r"jax\.buffer_donor")
+# executable-level aliasing entries in the compiled HLO's
+# input_output_alias header (the artifact XLA actually runs)
+_HLO_ALIAS_RE = re.compile(r"may-alias|must-alias")
+_CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback")
+_BAD_DTYPES = ("float64", "complex128")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _iter_jaxprs(v):
+    """Duck-typed sub-jaxpr extraction from an eqn param value (covers
+    ClosedJaxpr, raw Jaxpr, and branch lists as in ``cond``)."""
+    if hasattr(v, "jaxpr") and hasattr(v, "consts"):
+        yield v.jaxpr
+    elif hasattr(v, "eqns") and hasattr(v, "invars"):
+        yield v
+    elif isinstance(v, (list, tuple)):
+        for x in v:
+            yield from _iter_jaxprs(x)
+
+
+def walk_eqns(jaxpr, in_scan: bool = False):
+    """Yield ``(eqn, in_scan)`` for every equation in the program,
+    descending through pjit/scan/cond/custom-call sub-jaxprs.
+    ``in_scan`` is True once the walk has entered a scan/while body."""
+    for eqn in jaxpr.eqns:
+        yield eqn, in_scan
+        inner = in_scan or eqn.primitive.name in ("scan", "while")
+        for v in eqn.params.values():
+            for sub in _iter_jaxprs(v):
+                yield from walk_eqns(sub, inner)
+
+
+def jaxpr_census(closed) -> dict:
+    """Counts the contract checks consume, from one closed jaxpr."""
+    census = {"callbacks": [], "bad_dtype": [], "barriers": 0,
+              "scans": 0}
+    for eqn, in_scan in walk_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if any(cb in name for cb in _CALLBACK_PRIMS):
+            census["callbacks"].append(name)
+        if name == "optimization_barrier":
+            census["barriers"] += 1
+        if name == "scan":
+            census["scans"] += 1
+        if name == "convert_element_type":
+            tgt = str(eqn.params.get("new_dtype", ""))
+            if tgt in _BAD_DTYPES:
+                census["bad_dtype"].append(f"convert->{tgt}")
+        for var in eqn.outvars:
+            dt = str(getattr(getattr(var, "aval", None), "dtype", ""))
+            if dt in _BAD_DTYPES:
+                census["bad_dtype"].append(f"{name}:{dt}")
+    return census
+
+
+# ---------------------------------------------------------------------------
+# donation / aliasing
+# ---------------------------------------------------------------------------
+
+def donated_leaf_count(args, donate) -> int:
+    return sum(len(jax.tree.leaves(args[i])) for i in donate)
+
+
+def live_donated_leaves(closed, args, donate) -> int:
+    """Number of donated arg leaves the traced program actually reads.
+
+    ``jit`` drops unused args from the lowered module entirely (e.g. the
+    state leaves a per-step approach never touches), so an unused
+    donated leaf is a no-op donation, not a copy — only the LIVE leaves
+    must alias."""
+    counts = [len(jax.tree.leaves(a)) for a in args]
+    offsets = [0]
+    for c in counts:
+        offsets.append(offsets[-1] + c)
+    # a jitted fn traces to a single pjit eqn that consumes EVERY invar;
+    # follow each tracked invar through such call wrappers to the body
+    # where consumption is real (None = dropped before the body)
+    jaxpr = closed.jaxpr
+    tracked = list(jaxpr.invars)
+    while len(jaxpr.eqns) == 1 and jaxpr.eqns[0].primitive.name == "pjit":
+        eqn = jaxpr.eqns[0]
+        inner = next(_iter_jaxprs(eqn.params.get("jaxpr")), None)
+        if inner is None:
+            break
+        idx = {id(v): i for i, v in enumerate(eqn.invars)}
+        tracked = [inner.invars[idx[id(v)]]
+                   if v is not None and id(v) in idx else None
+                   for v in tracked]
+        jaxpr = inner
+    used = set()
+    for eqn in jaxpr.eqns:
+        used.update(id(v) for v in eqn.invars)
+    used.update(id(v) for v in jaxpr.outvars)
+    live = 0
+    for i in donate:
+        for pos in range(offsets[i], offsets[i + 1]):
+            v = tracked[pos] if pos < len(tracked) else None
+            if v is not None and id(v) in used:
+                live += 1
+    return live
+
+
+def check_specimen(sp, *, compile_alias: bool = False) -> list[Violation]:
+    """All trace contracts for one ``TraceSpecimen``."""
+    out = []
+    closed = jax.make_jaxpr(sp.fn)(*sp.args)
+    lowered = sp.fn.lower(*sp.args)
+    text = lowered.as_text()
+    aliased = len(_ALIASED_RE.findall(text))
+    donors = len(_DONOR_RE.findall(text))
+    if sp.donate:
+        want = live_donated_leaves(closed, sp.args, sp.donate)
+        # donation can be resolved at lowering (tf.aliasing_output on the
+        # arg) or deferred to compile (jax.buffer_donor + an executable
+        # input_output_alias entry — the sharded-module path); only a
+        # buffer missing from the EXECUTABLE's aliasing map is a copy
+        if donors or aliased < want or compile_alias:
+            hlo = lowered.compile().as_text()
+            got = len(_HLO_ALIAS_RE.findall(hlo))
+            if got < want:
+                out.append(Violation(
+                    "TRC001", sp.name,
+                    f"only {got}/{want} live donated leaves aliased in "
+                    f"the compiled executable's input_output_alias map "
+                    f"(donate_argnums={sp.donate}, lowered: {aliased} "
+                    f"aliased / {donors} buffer_donor) — the runtime "
+                    f"copies the rest ('donated but copied')"))
+    elif aliased or donors:
+        out.append(Violation(
+            "TRC001", sp.name,
+            f"engine is contractually NOT donated (bitwise-pin copy) but "
+            f"the lowered module aliases {aliased + donors} buffer(s)"))
+
+    census = jaxpr_census(closed)
+    if census["callbacks"]:
+        out.append(Violation(
+            "TRC002", sp.name,
+            f"host callback primitive(s) in engine program: "
+            f"{sorted(set(census['callbacks']))}"))
+    if census["bad_dtype"]:
+        out.append(Violation(
+            "TRC003", sp.name,
+            f"float64/complex128 value(s) in engine program: "
+            f"{sorted(set(census['bad_dtype']))[:4]}"))
+    if census["barriers"] < sp.min_barriers:
+        out.append(Violation(
+            "TRC004", sp.name,
+            f"{census['barriers']} optimization_barrier pin(s), contract "
+            f"requires >= {sp.min_barriers} (the _pin clusters the "
+            f"bitwise trajectory pin depends on)"))
+    if sp.expect_scan and census["scans"] == 0:
+        out.append(Violation(
+            "TRC004", sp.name,
+            "scan-fused engine contains no lax.scan (rounds would "
+            "dispatch per step)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# serve / decode program-count bounds
+# ---------------------------------------------------------------------------
+
+def check_serve_ladder(pair) -> list[Violation]:
+    from repro.core.spec import ServeSpec
+    from repro.serve.sampler import SamplerEngine
+
+    out = []
+    spec = ServeSpec(max_batch=4)
+    buckets = spec.buckets()
+    eng = SamplerEngine(pair, buckets)
+    g, d = pair.init(jax.random.key(0))
+    shape = np.asarray(pair.g_apply(g, pair.sample_z(jax.random.key(1),
+                                                     1))).shape[1:]
+    eng.seed_stream(0)
+    # drive EVERY request size through every family: the ladder bound
+    # must hold under the worst-case size mix, not a lucky one
+    for n in range(1, spec.max_batch + 1):
+        eng.sample_request(g, seed=0, request_id=n, n=n)
+        eng.score_bucket(d, np.zeros((n,) + tuple(shape), np.float32))
+        eng.sample_stream(g, n)
+    bound = len(buckets)
+    for fam, cnt in eng.program_counts.items():
+        if cnt > bound:
+            out.append(Violation(
+                "TRC005", f"serve/{fam}",
+                f"{cnt} compiled programs after driving sizes "
+                f"1..{spec.max_batch}; ladder bound is len(buckets)={bound}"))
+    # the stream program's donated RNG key must alias (in-place key
+    # update is its documented contract)
+    b = buckets[-1]
+    prog = eng._stream_prog(b)
+    text = prog.lower(g, jax.random.key(0)).as_text()
+    if not _ALIASED_RE.search(text) or _DONOR_RE.search(text):
+        out.append(Violation(
+            "TRC001", "serve/stream",
+            "stream program's donated RNG key is not aliased in the "
+            "lowered module"))
+    return out
+
+
+def check_decode_ladder() -> list[Violation]:
+    from repro.configs.base import get_config
+    from repro.core.spec import DecodeSpec
+    from repro.models import model as M
+    from repro.serve.decode import DecodeEngine, DecodeRequest
+
+    out = []
+    cfg = get_config("tinyllama-1.1b").reduced()
+    params = M.init_params(cfg, jax.random.key(1))
+    spec = DecodeSpec(slots=2, max_seq=24)
+    eng = DecodeEngine(cfg, params, spec)
+    # one prompt per prefill bucket, so the whole ladder compiles
+    for i, b in enumerate(spec.buckets()):
+        plen = min(b, spec.max_seq - 2)
+        eng.submit(DecodeRequest(user_id=i, prompt=tuple(range(1, plen + 1)),
+                                 max_new=2))
+    eng.drain()
+    bound = len(spec.buckets()) + 1
+    total = sum(eng.program_counts.values())
+    if total > bound:
+        out.append(Violation(
+            "TRC005", "decode",
+            f"{total} compiled programs ({eng.program_counts}) after "
+            f"driving every prefill bucket; static bound is "
+            f"len(buckets)+1={bound}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def _tiny_setup():
+    from repro.core.approaches import DistGANConfig
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=4, g_hidden=8,
+                                      d_hidden=8))
+    fcfg = DistGANConfig(num_users=2, selection="topk", upload_frac=0.5)
+    return pair, fcfg
+
+
+def run_tracecheck(*, approaches=None, spmd: bool | None = None,
+                   decode: bool = True,
+                   compile_aliasing: bool = True):
+    """Run every trace contract; returns ``(violations, checked)``.
+
+    ``spmd=None`` auto-enables the SPMD specimens when the process has
+    >= 2 devices (the CLI forces a 2-device CPU topology before jax
+    initializes; under pytest the platform is single-device and the SPMD
+    leg self-skips).  ``compile_aliasing`` compiles one representative
+    per donation class and asserts the executable-level aliasing map."""
+    from repro.core.engine import trace_specimens
+    from repro.core.spec import registry_snapshot
+
+    pair, fcfg = _tiny_setup()
+    fcfg_ef = dataclasses.replace(fcfg, codec="topk_int8",
+                                  error_feedback=True)
+    snapshot = registry_snapshot()
+    names = tuple(approaches) if approaches else snapshot["approach"]
+
+    violations: list[Violation] = []
+    checked_programs = []
+
+    specs = list(trace_specimens(pair, fcfg, approaches=names))
+    if "approach1" in names:
+        specs += list(trace_specimens(pair, fcfg_ef,
+                                      approaches=("approach1",)))
+
+    if spmd is None:
+        spmd = len(jax.devices()) >= 2
+    if spmd:
+        from repro.core.spmd import spmd_trace_specimens
+        from repro.launch.mesh import make_users_mesh
+
+        mesh = make_users_mesh(2)
+        specs += list(spmd_trace_specimens(pair, fcfg, mesh,
+                                           approaches=names))
+        if "approach1" in names:
+            specs += list(spmd_trace_specimens(pair, fcfg_ef, mesh,
+                                               approaches=("approach1",)))
+
+    # compile (not just lower) one representative per donation class:
+    # the donated fused engine and the donated fused-store window
+    deep = {"approach1/fused", "approach1/fused_store"}
+    for sp in specs:
+        violations += check_specimen(
+            sp, compile_alias=compile_aliasing and sp.name in deep)
+        checked_programs.append(sp.name)
+
+    violations += check_serve_ladder(pair)
+    checked_programs.append("serve/ladder")
+    if decode:
+        violations += check_decode_ladder()
+        checked_programs.append("decode/ladder")
+
+    checked = {
+        "trace_programs": len(checked_programs),
+        "trace_backends": ("device+host+spmd" if spmd else
+                           "device+host (spmd skipped: 1 device)"),
+        "trace_approaches": ",".join(names),
+    }
+    return violations, checked

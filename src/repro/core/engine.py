@@ -733,3 +733,131 @@ def run_scanned(engine: Callable, state, reals,
     metrics = jax.tree.map(lambda *xs: np.concatenate(xs, axis=0),
                            *chunks_metrics)
     return state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis introspection (consumed by repro.analysis.tracecheck)
+# ---------------------------------------------------------------------------
+
+class TraceSpecimen(NamedTuple):
+    """One jitted engine program plus the trace contract it must satisfy.
+
+    ``donate`` is the positional argnums the factory promises to donate —
+    the checker asserts every leaf of those args is ALIASED in the
+    lowered program (donated-but-copied is the regression class) and
+    that nothing else is.  ``min_barriers`` is the optimization_barrier
+    count the engine's bitwise pin depends on (the ``_pin`` clusters from
+    the approach bodies plus the cohort gather/scatter barriers);
+    ``expect_scan`` marks scan-fused programs (per_step engines have no
+    scan to find)."""
+
+    name: str
+    fn: Callable
+    args: tuple
+    donate: tuple
+    min_barriers: int
+    expect_scan: bool = True
+
+
+def _sample_shape(pair):
+    """Data sample shape, derived from the generator itself so specimens
+    track any pair architecture."""
+    g, _ = pair.init(jax.random.key(0))
+    x = pair.g_apply(g, pair.sample_z(jax.random.key(1), 1))
+    return tuple(x.shape[1:])
+
+
+def trace_specimens(pair, fcfg: DistGANConfig, *, approaches=None,
+                    rounds: int = 2, batch: int = 4):
+    """Yield every device/host engine family for every registered
+    approach (or the given subset) with tiny concrete example inputs —
+    the enumeration surface ``repro.analysis.tracecheck`` lowers and
+    inspects.  Donation expectations restate each factory's documented
+    contract (carry donated for fused/fused-store, deliberately NOT
+    donated for the cohort/spmd-cohort bitwise-pin engines, per-transfer
+    rows donated for the streaming engines)."""
+    from repro.core.spec import APPROACH_REGISTRY, _load_builtins
+    _load_builtins()
+    names = (tuple(approaches) if approaches
+             else tuple(sorted(APPROACH_REGISTRY.entries)))
+    K, B, U = rounds, batch, fcfg.num_users
+    C = U
+    shape = _sample_shape(pair)
+    ef = _wants_residual(fcfg)
+    dl = d_flat_layout(pair)
+    ol = d_opt_flat_layout(pair, fcfg)
+    valid = np.ones((K,), bool)
+
+    for name in names:
+        appr = resolve_approach(name)
+        key = jax.random.key(0)
+        state = init_state(pair, fcfg, key, sync_ds=appr.sync_ds)
+        if appr.user_axis:
+            reals = np.zeros((K, U, B) + shape, np.float32)
+        else:
+            reals = np.zeros((K, B) + shape, np.float32)
+        if not ef:
+            # the plain engines don't thread residual rows; an EF config
+            # only exists for the cohort/rows/superbatch families below
+            yield TraceSpecimen(
+                f"{name}/fused", make_engine(pair, fcfg, name),
+                (state, reals, valid), donate=(0,), min_barriers=1)
+            yield TraceSpecimen(
+                f"{name}/per_step", appr.step_factory(pair, fcfg),
+                (state, reals[0]), donate=(0,), min_barriers=1,
+                expect_scan=False)
+        if not appr.user_axis:
+            continue
+
+        cstate = init_cohort_state(pair, fcfg, key, sync_ds=appr.sync_ds)
+        idx = np.tile(np.arange(C, dtype=np.int32), (K, 1))
+        creals = np.zeros((K, C, B) + shape, np.float32)
+        # gather -> body -> scatter per round: the round's in/out barriers
+        # plus at least one _pin inside the approach body
+        yield TraceSpecimen(
+            f"{name}/cohort", make_cohort_engine(pair, fcfg, name),
+            (cstate, creals, idx, None, valid), donate=(), min_barriers=3)
+        yield TraceSpecimen(
+            f"{name}/fused_store",
+            make_fused_store_engine(pair, fcfg, name),
+            (cstate, creals, idx, None, valid), donate=(0,),
+            min_barriers=3)
+
+        ages = np.zeros((C,), np.int32)
+        d_rows = np.zeros((C, dl.n), np.float32)
+        o_rows = np.zeros((C, ol.n), np.float32)
+        if ef:
+            res = np.zeros((C, dl.n), np.float32)
+            yield TraceSpecimen(
+                f"{name}/rows_ef", make_cohort_rows_engine(pair, fcfg, name),
+                (CohortShared(state.g, state.g_opt, state.server_d,
+                              state.step, state.key),
+                 d_rows, o_rows, res, ages, None, creals[0]),
+                donate=(1, 2, 3), min_barriers=3, expect_scan=False)
+        else:
+            yield TraceSpecimen(
+                f"{name}/rows", make_cohort_rows_engine(pair, fcfg, name),
+                (CohortShared(state.g, state.g_opt, state.server_d,
+                              state.step, state.key),
+                 d_rows, o_rows, ages, None, creals[0]),
+                donate=(1, 2), min_barriers=3, expect_scan=False)
+
+        shared = CohortShared(state.g, state.g_opt, state.server_d,
+                              state.step, state.key)
+        blk_d = np.zeros((K, C, dl.n), np.float32)
+        blk_o = np.zeros((K, C, ol.n), np.float32)
+        fwd = np.full((K, C), -1, np.int32)
+        wages = np.zeros((K, C), np.int32)
+        if ef:
+            blk_r = np.zeros((K, C, dl.n), np.float32)
+            yield TraceSpecimen(
+                f"{name}/superbatch_ef",
+                make_superbatch_engine(pair, fcfg, name),
+                (shared, blk_d, blk_o, blk_r, fwd, wages, creals, None,
+                 valid), donate=(1, 2, 3), min_barriers=3)
+        else:
+            yield TraceSpecimen(
+                f"{name}/superbatch",
+                make_superbatch_engine(pair, fcfg, name),
+                (shared, blk_d, blk_o, fwd, wages, creals, None, valid),
+                donate=(1, 2), min_barriers=3)

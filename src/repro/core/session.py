@@ -140,7 +140,22 @@ def _valid_mask(k: int, rpj: int):
     return jnp.asarray(np.arange(rpj) < k)
 
 
-def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
+def _poison_donated(tree) -> None:
+    """Delete every jax.Array leaf of a carry that was just donated.
+
+    When donation is honored XLA already invalidated these buffers, but
+    on a backend (or program variant) where XLA declined to alias, the
+    stale python reference would keep READING the pre-window copy —
+    silently, with no error.  Deleting the leaves turns any such read
+    into an immediate "Array has been deleted" error at the use site
+    (the runtime twin of lint rule RPR003)."""
+    for leaf in jax.tree.leaves(tree):
+        if isinstance(leaf, jax.Array) and not leaf.is_deleted():
+            leaf.delete()
+
+
+def _drive_chunks(run_chunk, carry, steps: int, rpj: int,
+                  donating: bool = False):
     """Warmup + timed chunk loop shared by the fused and cohort drivers.
 
     Every chunk is rpj rounds (padded + masked), so the whole run shares
@@ -149,14 +164,21 @@ def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
     program too, which is what makes trajectories structurally invariant
     to windowing (XLA fuses e.g. a length-1 scan differently from a
     length-K one at metric-ULP level, so equal-program is the only safe
-    contract).  Returns ``(carry, chunks, compile_s, steady_s,
-    window_rates)``; ``window_rates`` holds per-round seconds of each
-    FULL post-warmup window — the remainder window is excluded because
-    its rate would over-count the masked padding rounds it still
-    computes."""
+    contract).  ``donating=True`` declares that ``run_chunk`` DONATES
+    the carry to its engine: each consumed carry is then poisoned
+    (:func:`_poison_donated`) so any stale reference held elsewhere —
+    the driver's own ``_state`` mid-run included — raises immediately
+    instead of reading a pre-window copy.  Returns ``(carry, chunks,
+    compile_s, steady_s, window_rates)``; ``window_rates`` holds
+    per-round seconds of each FULL post-warmup window — the remainder
+    window is excluded because its rate would over-count the masked
+    padding rounds it still computes."""
     k0 = min(rpj, steps)
     t0 = time.perf_counter()
+    prev = carry
     carry, m0 = run_chunk(0, k0, carry)
+    if donating:
+        _poison_donated(prev)
     compile_s = time.perf_counter() - t0
     chunks = [m0]
 
@@ -166,7 +188,10 @@ def _drive_chunks(run_chunk, carry, steps: int, rpj: int):
     while i < steps:
         k = min(rpj, steps - i)
         tc = time.perf_counter()
+        prev = carry
         carry, m = run_chunk(i, k, carry)
+        if donating:
+            _poison_donated(prev)
         if k == rpj:
             window_rates.append((time.perf_counter() - tc) / k)
         chunks.append(m)
@@ -677,8 +702,10 @@ class DeviceBackendDriver(BackendDriver):
             # one sync per chunk; padded rounds sliced off
             return state, jax.tree.map(lambda x: np.asarray(x)[:k], m)
 
+        # make_engine donates the state carry (argnum 0): poison each
+        # consumed window carry so a stale self._state read fails fast
         state, chunks, compile_s, steady, window_rates = _drive_chunks(
-            run_chunk, self.state, rounds, rpj)
+            run_chunk, self.state, rounds, rpj, donating=True)
         self.state = state
 
         g_losses = np.concatenate([c["g_loss"] for c in chunks])
@@ -794,8 +821,11 @@ class DeviceBackendDriver(BackendDriver):
                                  valid=_valid_mask(k, rpj))
             return cstate, jax.tree.map(lambda x: np.asarray(x)[:k], m)
 
+        # only the fused-store engine donates the carry (the plain cohort
+        # engine keeps the bitwise-pin copy — its carry stays readable)
         cstate, chunks, compile_s, steady, window_rates = _drive_chunks(
-            run_chunk, self.cstate, rounds, rpj)
+            run_chunk, self.cstate, rounds, rpj,
+            donating=self.fused_store)
         self.cstate = cstate
 
         g_losses = np.concatenate([c["g_loss"] for c in chunks])

@@ -181,6 +181,21 @@ class _BackendDef:
     streams: bool
 
 
+def registry_snapshot() -> dict[str, tuple[str, ...]]:
+    """All registered keys per registry kind, builtins loaded — the
+    enumeration surface ``repro.analysis`` walks so the contract checker
+    covers every registered implementation instead of a hard-coded list
+    (a newly registered approach/backend is checked the moment it
+    registers)."""
+    _load_builtins()
+    return {
+        "approach": tuple(sorted(APPROACH_REGISTRY.entries)),
+        "scheduler": tuple(sorted(SCHEDULER_REGISTRY.entries)),
+        "combiner": tuple(sorted(COMBINER_REGISTRY.entries)),
+        "backend": tuple(sorted(BACKEND_REGISTRY.entries)),
+    }
+
+
 def resolve_approach(name: str) -> ApproachDef:
     return APPROACH_REGISTRY.get(name)
 
@@ -336,6 +351,11 @@ class CompressionSpec:
         if self.codec not in CODECS:
             raise ValueError(f"unknown codec {self.codec!r}; choose from "
                              f"{CODECS}")
+        if not isinstance(self.error_feedback, bool):
+            # caught by RPR005: a manifest's "error_feedback": "false"
+            # (string) is truthy and would silently enable EF rows
+            raise ValueError(f"error_feedback must be a bool, got "
+                             f"{self.error_feedback!r}")
         if self.stochastic and self.codec not in _INT8_CODECS:
             raise ValueError(
                 f"stochastic rounding is an int8-codec knob (codec is "
@@ -370,6 +390,11 @@ class CombineSpec:
         if not (0.0 < float(self.staleness_decay) <= 1.0):
             raise ValueError(f"staleness_decay must be in (0, 1], got "
                              f"{self.staleness_decay!r}")
+        if not isinstance(self.adaptive_server_scale, bool):
+            # caught by RPR005: the flag gates an extra engine input, so
+            # a truthy non-bool would silently change the traced program
+            raise ValueError(f"adaptive_server_scale must be a bool, got "
+                             f"{self.adaptive_server_scale!r}")
         if isinstance(self.compression, dict):
             # nested manifest section: from_dict only coerces top-level
             # sections, so the combine section coerces its own child
@@ -596,9 +621,28 @@ class FederationSpec:
         if not isinstance(self.batch_size, int) or self.batch_size < 1:
             raise ValueError(f"batch_size must be a positive int, got "
                              f"{self.batch_size!r}")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool):
+            # caught by RPR005: the seed drives every PRNG split; a
+            # float/str seed would crash deep inside jax.random instead
+            # of at manifest validation
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
         if not isinstance(self.eval_samples, int) or self.eval_samples < 0:
             raise ValueError(f"eval_samples must be an int >= 0, got "
                              f"{self.eval_samples!r}")
+        if not isinstance(self.participation, ParticipationSpec):
+            raise ValueError(f"participation must be a ParticipationSpec, "
+                             f"got {self.participation!r}")
+        # caught by RPR005: direct construction (not via from_dict) with
+        # a raw manifest dict would carry the dict through undetected
+        # until serve time — coerce sub-spec sections in from_dict only,
+        # reject everything that is not the typed spec here
+        if self.serve is not None and not isinstance(self.serve, ServeSpec):
+            raise ValueError(f"serve must be a ServeSpec or None, got "
+                             f"{self.serve!r}")
+        if self.decode is not None and not isinstance(self.decode,
+                                                      DecodeSpec):
+            raise ValueError(f"decode must be a DecodeSpec or None, got "
+                             f"{self.decode!r}")
         if not approach.user_axis and self.cohort_virtual:
             raise ValueError(
                 f"approach {self.approach!r} has no user axis to "

@@ -17,6 +17,7 @@ generator and its optimizer state are replicated.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 
 import jax
@@ -656,3 +657,82 @@ def make_spmd_step(pair, fcfg: DistGANConfig, mesh, approach: str):
         return fn(state, real)
 
     return jax.jit(step, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# Static-analysis introspection (consumed by repro.analysis.tracecheck)
+# ---------------------------------------------------------------------------
+
+def spmd_trace_specimens(pair, fcfg: DistGANConfig, mesh, *,
+                         approaches=None, rounds: int = 2, batch: int = 4):
+    """Yield every SPMD engine family as a ``TraceSpecimen`` (see
+    ``core.engine``) for the approaches the mesh bodies cover.  The SPMD
+    bodies carry no ``_pin`` barriers — their reproducibility contract is
+    the psum/one-hot gather structure, not barrier pins — so
+    ``min_barriers`` is 0 throughout; the donation split restates each
+    factory's contract (plain/rows carries donated, the two cohort
+    store engines deliberately NOT — the bitwise-pin copies)."""
+    import numpy as np
+
+    from repro.core.engine import (CohortShared, TraceSpecimen, _sample_shape,
+                                   init_cohort_state, init_state,
+                                   make_spmd_cohort_engine,
+                                   make_spmd_fused_store_engine)
+    from repro.core.engine import make_spmd_engine as _mk_spmd_engine
+    from repro.core.spec import resolve_approach
+
+    spmd_capable = ("approach1", "approach2", "approach3")
+    names = tuple(approaches) if approaches else spmd_capable
+    K, B = rounds, batch
+    U = C = mesh.shape[AXIS]
+    fcfg = dataclasses.replace(fcfg, num_users=U)
+    shape = _sample_shape(pair)
+    dl = d_flat_layout(pair)
+    ol = d_opt_flat_layout(pair, fcfg)
+    ef = fcfg.codec != "none" and fcfg.error_feedback
+    valid = np.ones((K,), bool)
+
+    for name in names:
+        if name not in spmd_capable:
+            continue
+        appr = resolve_approach(name)
+        key = jax.random.key(0)
+        state = init_state(pair, fcfg, key, sync_ds=appr.sync_ds)
+        reals = np.zeros((K, U, B) + shape, np.float32)
+        if not ef:
+            yield TraceSpecimen(
+                f"{name}/spmd", _mk_spmd_engine(pair, fcfg, mesh, name),
+                (state, reals, valid), donate=(0,), min_barriers=0)
+            yield TraceSpecimen(
+                f"{name}/spmd_step", make_spmd_step(pair, fcfg, mesh, name),
+                (state, reals[0]), donate=(0,), min_barriers=0,
+                expect_scan=False)
+
+        cstate = init_cohort_state(pair, fcfg, key, sync_ds=appr.sync_ds)
+        idx = np.tile(np.arange(C, dtype=np.int32), (K, 1))
+        yield TraceSpecimen(
+            f"{name}/spmd_cohort",
+            make_spmd_cohort_engine(pair, fcfg, mesh, name, C),
+            (cstate, reals, idx, valid), donate=(), min_barriers=0)
+        yield TraceSpecimen(
+            f"{name}/spmd_fused_store",
+            make_spmd_fused_store_engine(pair, fcfg, mesh, name, C),
+            (cstate, reals, idx, valid), donate=(), min_barriers=0)
+
+        shared = CohortShared(state.g, state.g_opt, state.server_d,
+                              state.step, state.key)
+        ages = np.zeros((C,), np.int32)
+        d_rows = np.zeros((C, dl.n), np.float32)
+        o_rows = np.zeros((C, ol.n), np.float32)
+        rows_eng = make_spmd_cohort_rows_engine(pair, fcfg, mesh, name, C)
+        if ef:
+            res = np.zeros((C, dl.n), np.float32)
+            yield TraceSpecimen(
+                f"{name}/spmd_rows_ef", rows_eng,
+                (shared, d_rows, o_rows, res, ages, None, reals[0]),
+                donate=(0, 1, 2, 3), min_barriers=0, expect_scan=False)
+        else:
+            yield TraceSpecimen(
+                f"{name}/spmd_rows", rows_eng,
+                (shared, d_rows, o_rows, ages, None, reals[0]),
+                donate=(0, 1, 2), min_barriers=0, expect_scan=False)

@@ -91,6 +91,12 @@ class DecodeRequest:
         if not isinstance(self.max_new, int) or self.max_new < 1:
             raise ValueError(f"max_new must be a positive int, got "
                              f"{self.max_new!r}")
+        # -1 is the replay sentinel ("no tenant") — see DecodeEngine.replay
+        if not isinstance(self.user_id, int) or self.user_id < -1:
+            raise ValueError(f"user_id must be an int >= -1, got "
+                             f"{self.user_id!r}")
+        if not isinstance(self.seed, int):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
 
 
 class _Pending:

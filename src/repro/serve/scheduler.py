@@ -62,11 +62,17 @@ class SampleRequest:
     user_id: int
     n: int
     seed: int = 0
+    # repro: allow(RPR005): cond is an opaque reserved slot — no invariant
     cond: Any = None
 
     def __post_init__(self):
         if not isinstance(self.n, int) or self.n < 1:
             raise ValueError(f"n must be a positive int, got {self.n!r}")
+        if not isinstance(self.user_id, int) or self.user_id < 0:
+            raise ValueError(f"user_id must be a non-negative int, got "
+                             f"{self.user_id!r}")
+        if not isinstance(self.seed, int):
+            raise ValueError(f"seed must be an int, got {self.seed!r}")
 
 
 class _Pending:

@@ -272,8 +272,11 @@ class GenerationService:
         if self.session is None:
             raise ValueError("rejection filtering needs a bound session "
                              "(the per-user D rows live in its store)")
+        # jnp.array (forced copy): user_d_flat may return a view of the
+        # session's live host store, and asarray would zero-copy it —
+        # later scatters would silently rewrite the "snapshot" (RPR001)
         return self._d_layout.unflatten(
-            jnp.asarray(self.session.user_d_flat(user_id)))
+            jnp.array(self.session.user_d_flat(user_id)))
 
     def sample_filtered(self, user_id: int, n: int, seed: int = 0, *,
                         request_id: int | None = None,

@@ -1,0 +1,12 @@
+"""KNOWN-BAD fixture for RPR001: jnp.asarray on a self-rooted buffer."""
+import jax.numpy as jnp
+
+
+class Store:
+    def __init__(self, buf):
+        self.buf = buf
+
+    def snapshot(self):
+        # may zero-copy the live host buffer: later in-place writes to
+        # self.buf silently rewrite this "snapshot"
+        return jnp.asarray(self.buf)

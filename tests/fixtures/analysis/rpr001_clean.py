@@ -1,0 +1,16 @@
+"""KNOWN-CLEAN fixture for RPR001: forced copies and fresh temps."""
+import jax.numpy as jnp
+import numpy as np
+
+
+class Store:
+    def __init__(self, buf):
+        self.buf = buf
+
+    def snapshot(self):
+        return jnp.array(self.buf)          # forced copy: safe
+
+
+def stage(rows):
+    block = np.stack(rows)
+    return jnp.asarray(block)               # fresh local temp: safe

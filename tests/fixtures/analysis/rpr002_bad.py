@@ -1,0 +1,14 @@
+"""KNOWN-BAD fixture for RPR002: a referenced-but-unregistered key AND a
+registered-but-never-referenced (dead) key."""
+from repro.core.spec import register_scheduler, resolve_approach
+
+
+def pick():
+    return resolve_approach("ghost_approach")
+
+
+def _sched(key, cohort, num_users, rounds):
+    return None
+
+
+register_scheduler("dead_sched", _sched)

@@ -1,0 +1,14 @@
+"""KNOWN-CLEAN fixture for RPR002: every key registered AND referenced
+within the linted corpus."""
+from repro.core.spec import register_approach, resolve_approach
+
+
+def _toy(pair, fcfg):
+    return None
+
+
+register_approach("toy_approach", _toy)
+
+
+def pick():
+    return resolve_approach("toy_approach")

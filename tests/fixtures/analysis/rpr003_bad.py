@@ -1,0 +1,14 @@
+"""KNOWN-BAD fixture for RPR003: reading a carry after a donating engine
+call consumed it."""
+from repro.core.engine import make_engine
+
+
+def train(pair, fcfg, approach, state, reals, valid):
+    eng = make_engine(pair, fcfg, approach)
+    new_state, metrics = eng(state, reals, valid)
+    loss = summarize(state)        # stale: `state` was donated above
+    return new_state, loss
+
+
+def summarize(state):
+    return state

@@ -1,0 +1,14 @@
+"""KNOWN-CLEAN fixture for RPR003: the carry is rebound by every
+donating call before any further read."""
+from repro.core.engine import make_engine
+
+
+def train(pair, fcfg, approach, state, reals, valid):
+    eng = make_engine(pair, fcfg, approach)
+    state, metrics = eng(state, reals, valid)
+    loss = summarize(state)        # fresh: rebound by the engine call
+    return state, loss
+
+
+def summarize(state):
+    return state

@@ -1,0 +1,6 @@
+"""KNOWN-BAD fixture for RPR004: draws from the unseeded global PRNG."""
+import numpy as np
+
+
+def make_batch(n):
+    return np.random.randn(n, 2)

@@ -1,0 +1,8 @@
+"""KNOWN-CLEAN fixture for RPR004: every draw through a seeded
+generator."""
+import numpy as np
+
+
+def make_batch(n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, 2))

@@ -1,0 +1,13 @@
+"""KNOWN-BAD fixture for RPR005: a spec dataclass field that
+__post_init__ never validates."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ToySpec:
+    rounds: int
+    cohort: int            # never referenced in __post_init__
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError("rounds must be positive")

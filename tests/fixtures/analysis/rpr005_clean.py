@@ -1,0 +1,14 @@
+"""KNOWN-CLEAN fixture for RPR005: every field validated."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ToySpec:
+    rounds: int
+    cohort: int
+
+    def __post_init__(self):
+        if self.rounds < 1:
+            raise ValueError("rounds must be positive")
+        if self.cohort < 1:
+            raise ValueError("cohort must be positive")

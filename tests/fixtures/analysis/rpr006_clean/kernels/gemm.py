@@ -1,0 +1,11 @@
+"""KNOWN-CLEAN fixture for RPR006: kernel + matching oracle (never
+imported — parsed only)."""
+import jax.experimental.pallas as pl
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] @ b_ref[...]
+
+
+def gemm_pallas(a, b):
+    return pl.pallas_call(_gemm_kernel, out_shape=None)(a, b)

@@ -1,0 +1,5 @@
+"""Oracle module providing the gemm_ref reference implementation."""
+
+
+def gemm_ref(a, b):
+    return a @ b

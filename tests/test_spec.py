@@ -44,10 +44,13 @@ def _ds(num_users):
 
 def test_registry_unknown_keys_raise():
     with pytest.raises(KeyError, match="unknown approach"):
+        # repro: allow(RPR002): negative test — key must not exist
         FederationSpec(approach="no_such_approach")
     with pytest.raises(KeyError, match="unknown scheduler"):
+        # repro: allow(RPR002): negative test — key must not exist
         ParticipationSpec(scheduler="no_such_scheduler")
     with pytest.raises(KeyError, match="unknown combiner"):
+        # repro: allow(RPR002): negative test — key must not exist
         CombineSpec(combiner="no_such_combiner")
     with pytest.raises(KeyError, match="unknown backend"):
         BackendSpec(kind="no_such_backend")

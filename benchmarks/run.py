@@ -760,6 +760,95 @@ def paper_compress():
 
 
 # ---------------------------------------------------------------------------
+# Multi-process federation control plane (PR 10 tentpole)
+# ---------------------------------------------------------------------------
+
+def paper_multihost():
+    """The ``multihost`` backend: U logical users sharded over 2 local
+    worker processes, coordinator-driven rounds over the RPC wire.
+
+    Gates:
+
+    * per-round time FLAT in U (t_U4096 / t_U512 < 1.5) — per round only
+      the C scheduled rows cross the wire, so the store size U prices
+      nothing on the round path (only worker RAM);
+    * measured wire payload bytes per run EXACTLY equal the
+      ``upload_bytes_flat``-composed pricing (``wire.priced_round_nbytes``)
+      for the configured transport — codec=topk_int8 with
+      ``stage_rows``: D-row legs cross as int8 + per-row f32 scale, opt
+      and EF-residual legs as exact f32 (the ledger is never quantized).
+      The backend also hard-asserts this per RPC call.
+
+    The in-graph DELTA upload (what each user ships to the server
+    combine, codec topk_int8) is priced separately via
+    ``extra["upload_bytes_per_round"]`` and reported for comparison —
+    the store wire and the delta upload are different legs of the same
+    PR 8 pricing table."""
+    from repro.core.approaches import (DistGANConfig, d_flat_layout,
+                                       d_opt_flat_layout)
+    from repro.core.gan import MLPGanConfig, make_mlp_pair
+    from repro.core.session import FederationSession
+    from repro.core.spec import (BackendSpec, CombineSpec, CompressionSpec,
+                                 FederationSpec, ParticipationSpec)
+    from repro.multihost import wire
+
+    pair = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                      d_hidden=16))
+    C, W = 8, 2
+    steps = 24 if QUICK else 64
+    fcfg0 = DistGANConfig(num_users=8, selection="topk", upload_frac=0.5)
+    nd = d_flat_layout(pair).n
+    no = d_opt_flat_layout(pair, fcfg0).n
+    times, stats = {}, {}
+    for U in (512, 4096):
+        ds = _stream_ds(U, 2)
+        fcfg = DistGANConfig(num_users=U, selection="topk",
+                             upload_frac=0.5)
+        spec = FederationSpec(
+            approach="approach1", batch_size=32, seed=SEED,
+            eval_samples=0,
+            participation=ParticipationSpec(scheduler="uniform",
+                                            cohort_size=C),
+            backend=BackendSpec(kind="multihost", workers=W,
+                                materialize_state=False),
+            combine=CombineSpec(compression=CompressionSpec(
+                codec="topk_int8", error_feedback=True,
+                stage_rows=True)))
+        sess = FederationSession(pair, fcfg, ds, spec)
+        try:
+            r = sess.run(steps)
+            mb = r.extra["host_backend"]
+            times[U] = r.extra["min_step_time_s"] * 1e6
+            stats[U] = {"measured": mb.round_payload_bytes,
+                        "socket": mb.socket_bytes,
+                        "rpc_calls": mb.rpc_calls,
+                        "delta_priced": int(
+                            r.extra["upload_bytes_per_round"])}
+        finally:
+            sess.close()
+        emit(f"paper_multihost/U{U}_W{W}_C{C}", times[U],
+             f"steps={steps};workers={W};"
+             f"wire_payload_bytes={stats[U]['measured']};"
+             f"rpc_calls={stats[U]['rpc_calls']};"
+             f"delta_upload_priced_bytes_per_round="
+             f"{stats[U]['delta_priced']};"
+             f"finite={int(np.all(np.isfinite(r.g_losses)))}")
+    ratio = times[4096] / times[512]
+    priced = steps * wire.priced_round_nbytes(C, nd, no,
+                                              stage_codec="int8",
+                                              has_residual=True)
+    measured = stats[4096]["measured"]
+    envelope = stats[4096]["socket"] / max(measured, 1)
+    emit("paper_multihost/u_independence", 0.0,
+         f"t_U4096/t_U512=x{ratio:.2f};workers={W};"
+         f"pass={int(ratio < 1.5)}")
+    emit("paper_multihost/wire_priced_vs_measured", 0.0,
+         f"priced={priced};measured={measured};codec=topk_int8;"
+         f"stage_rows=int8+scale;socket/payload=x{envelope:.2f};"
+         f"pass={int(measured == priced)}")
+
+
+# ---------------------------------------------------------------------------
 # Multi-tenant generation serving (PR 5 tentpole)
 # ---------------------------------------------------------------------------
 
@@ -1140,6 +1229,7 @@ BENCHES = {
     "paper_stream": paper_stream,
     "paper_fused_store": paper_fused_store,
     "paper_compress": paper_compress,
+    "paper_multihost": paper_multihost,
     "paper_serve": paper_serve,
     "paper_decode": paper_decode,
     "paper_bandwidth": paper_bandwidth,

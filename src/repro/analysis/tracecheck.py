@@ -317,6 +317,15 @@ def run_tracecheck(*, approaches=None, spmd: bool | None = None,
     if "approach1" in names:
         specs += list(trace_specimens(pair, fcfg_ef,
                                       approaches=("approach1",)))
+        # multihost backend (PR 10): the RPC-staged rows engine under its
+        # registered name (TRC001 on the cross-host row-transport
+        # buffers: the gathered rows must alias in place through the
+        # engine) plus the int8 wire pack/unpack transport programs
+        # (contractually NOT donated — dtype narrowing makes aliasing
+        # impossible, so a donation claim would be a silent copy)
+        from repro.multihost.backend import multihost_trace_specimens
+        specs += list(multihost_trace_specimens(pair, fcfg))
+        specs += list(multihost_trace_specimens(pair, fcfg_ef))
 
     if spmd is None:
         spmd = len(jax.devices()) >= 2

@@ -559,6 +559,20 @@ class BackendDriver:
     def load_arrays(self, tree) -> None:
         raise NotImplementedError
 
+    # -- out-of-tree checkpoint state + lifecycle --------------------------
+
+    def save_aux(self, path: str, step: int) -> None:
+        """Persist state ``arrays()`` does not carry (the multihost
+        driver's workers each checkpoint their own store shard here);
+        in-process drivers have none."""
+
+    def load_aux(self, path: str, step: int) -> None:
+        """Restore the ``save_aux`` state in a fresh process."""
+
+    def close(self) -> None:
+        """Release out-of-process resources (worker fleets); in-process
+        drivers hold none."""
+
     # -- serve handles (repro.serve reads live training state) -------------
 
     def generator_params(self):
@@ -897,7 +911,7 @@ class HostStreamDriver(BackendDriver):
         # transport — all FALL BACK to the per-round stream and report
         # extra["fused_store"] = False.
         self.stage_rows = (sp.combine.compression.stage_rows
-                           and self.backend_name == "host")
+                           and self.backend_name in ("host", "multihost"))
         self.fused_store = (sp.engine.fuse_store_rounds
                             and self.backend_name == "host"
                             and sp.backend.async_rounds == 0
@@ -1347,6 +1361,7 @@ class FederationSession:
                 "trajectory; restore from the last good checkpoint.")
         os.makedirs(path, exist_ok=True)
         ckpt = save_checkpoint(path, self.round, self._driver.arrays())
+        self._driver.save_aux(path, self.round)
         meta = {
             "format": 1,
             "spec": self.spec.to_dict(),
@@ -1363,15 +1378,26 @@ class FederationSession:
         os.replace(tmp, os.path.join(path, _SESSION_META))
         return ckpt
 
+    def close(self) -> None:
+        """Release the driver's out-of-process resources (the multihost
+        backend's worker fleet); a no-op for in-process backends.  The
+        session is unusable afterwards."""
+        self._driver.close()
+
     @classmethod
     def restore(cls, path: str, pair, fcfg: DistGANConfig, dataset, *,
-                mesh=None) -> "FederationSession":
+                mesh=None, workers: int | None = None) -> "FederationSession":
         """Rebuild a session from ``save(path)`` in a (possibly fresh)
         process.  ``pair`` / ``fcfg`` / ``dataset`` are the runtime
         objects the manifest cannot serialize and must match the saving
         run; the spec itself comes from the checkpoint.  ``dataset=None``
         restores a serve-only session (repro.serve reads the generator
-        and store rows; ``run`` needs a real dataset)."""
+        and store rows; ``run`` needs a real dataset).
+
+        ``workers`` overrides a multihost checkpoint's worker count —
+        the sharded store re-partitions on restore (each worker loads
+        the overlapping slices of the saved shard files), so a run saved
+        at W workers resumes bit-identically at any other W'."""
         with open(os.path.join(path, _SESSION_META)) as f:
             meta = json.load(f)
         if meta["num_users"] != fcfg.num_users:
@@ -1379,6 +1405,14 @@ class FederationSession:
                 f"checkpoint was saved with num_users={meta['num_users']}, "
                 f"got fcfg.num_users={fcfg.num_users}")
         spec = FederationSpec.from_dict(meta["spec"])
+        if workers is not None:
+            if spec.backend.kind != "multihost":
+                raise ValueError(
+                    f"workers= re-partitions a multihost checkpoint; this "
+                    f"one was saved with backend {spec.backend.kind!r}")
+            spec = dataclasses.replace(
+                spec, backend=dataclasses.replace(spec.backend,
+                                                  workers=workers))
         # defer state materialization: the fresh-init values would be
         # discarded by load_arrays anyway, and at large U the double
         # (U, N) store materialization dominates resume cost
@@ -1387,6 +1421,7 @@ class FederationSession:
         assert latest_step(path) == step, (latest_step(path), step)
         sess._driver.load_arrays(
             restore_checkpoint(path, step, sess._driver.arrays()))
+        sess._driver.load_aux(path, step)
         sess.round = step
         sess.data_rng.bit_generator.state = meta["data_rng"]
         sess.sched_rng.bit_generator.state = meta["sched_rng"]

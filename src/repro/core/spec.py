@@ -65,6 +65,7 @@ def _load_builtins() -> None:
         import repro.core.federated   # noqa: F401  (schedulers + combiners)
         import repro.core.session     # noqa: F401  (device/host backends)
         import repro.core.spmd        # noqa: F401  (spmd backend)
+        import repro.multihost.backend  # noqa: F401  (multihost backend)
     except BaseException:
         _builtins_state = "unloaded"
         raise
@@ -282,18 +283,46 @@ class BackendSpec:
     ``async_rounds=S`` lets a round's scatter-back land up to S rounds
     late (bounded staleness); ``prefetch`` stages round k+1 under round
     k's compute; ``materialize_state=False`` skips the final (U, N)
-    device unpack.  All three are streaming-backend knobs."""
+    device unpack.  All three are streaming-backend knobs.
+
+    ``multihost`` partitions the host store across ``workers`` local
+    worker processes reached over RPC (repro.multihost); ``workers``
+    is required for it and illegal elsewhere.  ``rpc_timeout_s`` /
+    ``rpc_retries`` bound every RPC — a dead worker fails the round
+    with a named error inside ``(rpc_retries + 1) * rpc_timeout_s``
+    instead of hanging."""
 
     kind: str = "device"
     async_rounds: int = 0
     prefetch: bool = True
     materialize_state: bool = True
+    workers: int | None = None
+    rpc_timeout_s: float = 10.0
+    rpc_retries: int = 2
 
     def __post_init__(self):
         backend = resolve_backend(self.kind)  # raises on unknown
         if not isinstance(self.async_rounds, int) or self.async_rounds < 0:
             raise ValueError(f"async_rounds must be an int >= 0, got "
                              f"{self.async_rounds!r}")
+        if self.kind == "multihost":
+            if not isinstance(self.workers, int) or self.workers < 1:
+                raise ValueError(
+                    f"BackendSpec(kind='multihost') partitions the (U, N) "
+                    f"store across worker processes — set workers to an "
+                    f"int >= 1, got {self.workers!r}")
+        elif self.workers is not None:
+            raise ValueError(
+                f"workers partitions the multihost store; the "
+                f"{self.kind!r} backend runs in one process")
+        if (not isinstance(self.rpc_timeout_s, (int, float))
+                or isinstance(self.rpc_timeout_s, bool)
+                or self.rpc_timeout_s <= 0):
+            raise ValueError(f"rpc_timeout_s must be a number > 0, got "
+                             f"{self.rpc_timeout_s!r}")
+        if not isinstance(self.rpc_retries, int) or self.rpc_retries < 0:
+            raise ValueError(f"rpc_retries must be an int >= 0, got "
+                             f"{self.rpc_retries!r}")
         if not backend.streams:
             if self.async_rounds:
                 raise ValueError(
@@ -668,7 +697,8 @@ class FederationSpec:
                     "error feedback keeps a per-user residual row in the "
                     "cohort store; run a cohort-virtualized configuration "
                     "or set compression.error_feedback=False")
-        if comp.stage_rows and self.backend.kind not in ("host", "spmd"):
+        if comp.stage_rows and self.backend.kind not in ("host", "spmd",
+                                                         "multihost"):
             raise ValueError(
                 f"stage_rows compresses the host<->device / cross-mesh "
                 f"row movement; the {self.backend.kind!r} backend's store "
@@ -697,6 +727,11 @@ class FederationSpec:
                 f"'full' participation needs cohort_size == num_users "
                 f"(got C={c}, U={num_users}); pick a partial scheduler "
                 f"for C < U")
+        if (self.backend.kind == "multihost"
+                and self.backend.workers > num_users):
+            raise ValueError(
+                f"cannot partition num_users={num_users} over "
+                f"workers={self.backend.workers} (empty shard)")
 
     # -- serialization -----------------------------------------------------
 

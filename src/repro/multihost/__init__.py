@@ -1,0 +1,24 @@
+"""Multi-process federation control plane (the MD-GAN topology).
+
+One coordinator process owns the generator / server-D carry and drives
+rounds on its device; N worker processes each hold a contiguous
+partition of the ``(U, N)`` host store (D rows, optimizer rows, EF
+residual rows).  Per round the coordinator resolves the scheduled
+cohort, gathers the owning workers' rows over a length-prefixed
+msgpack-over-TCP RPC layer, runs the existing cohort rows engine, and
+scatters the updated rows back — with the D-row legs packed exactly as
+the PR 8 ``CompressionSpec`` int8 codec produces them (int8 + per-row
+f32 scale, priced by ``upload_bytes_flat`` and asserted equal to the
+measured payload bytes on every call).
+
+Modules:
+
+* ``wire``    — jax-free packed row payloads + the pricing composition
+* ``rpc``     — frame codec, RpcServer/RpcClient, the named failure
+  errors (``WorkerDied`` / ``RpcTimeout`` / ``TornFrame``)
+* ``worker``  — the jax-free shard-holder process (``python -m
+  repro.multihost.worker``)
+* ``launch``  — spawn → health-check → run → collect → teardown
+* ``backend`` — ``MultihostStateBackend`` + the registered
+  ``multihost`` streaming driver
+"""

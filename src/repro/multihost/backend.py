@@ -1,0 +1,366 @@
+"""The registered ``multihost`` backend: RPC-sharded host store behind
+the unchanged streaming driver.
+
+``MultihostStateBackend`` implements the ``UserStateBackend`` contract
+over a fleet of shard-holder workers (``repro.multihost.worker``): a
+cohort's row indices are routed to their owning workers
+(``searchsorted`` on the contiguous partition bounds), one gather /
+scatter RPC goes to each involved worker, and the reassembled rows are
+handed to ``stream_cohort_rounds`` exactly as the in-process
+``HostStateBackend`` would — the coordinator runs the SAME cohort rows
+engine on its device, so a 2-worker run pins BITWISE against the
+single-process host backend (tests/test_multihost.py):
+
+* ``stage_rows`` off — every leg crosses the wire as exact f32 bytes;
+* ``stage_rows`` on  — D-row legs cross as int8 + per-row f32 scale
+  (the PR 8 transport payload).  The backend dequantizes for the
+  driver, whose own ``stage_codec="int8"`` path re-quantizes — and
+  per-row absmax int8 is IDEMPOTENT (the absmax element maps to exactly
+  +-127), so the device sees bit-identical rows either way.
+
+Every call hard-asserts measured payload bytes == the
+``upload_bytes_flat``-composed pricing (``wire.priced_*``); the
+accumulated counters feed the ``paper_multihost`` bench gate.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import _wants_residual
+from repro.core.federated import CohortStore, UserStateBackend
+from repro.core.session import (HostStreamDriver, _pack_key, _unpack_key)
+from repro.core.spec import register_backend
+from repro.multihost import wire
+from repro.multihost.launch import Fleet, launch_local_workers
+
+_SHARDS_MANIFEST = "shards.json"
+_PUSH_CHUNK = 1024
+
+
+class MultihostStateBackend(UserStateBackend):
+    """Per-user rows partitioned across worker processes, reached over
+    RPC.  Gathers/scatters preserve cohort order; duplicate indices keep
+    the host backend's last-writer-wins fancy-indexing semantics (each
+    worker applies the same numpy assignment)."""
+
+    device_resident = False
+
+    def __init__(self, fleet: Fleet, num_users: int, nd: int, no: int, *,
+                 has_residual: bool, stage_codec: str = "none"):
+        self.fleet = fleet
+        self._num_users = num_users
+        self.nd, self.no = nd, no
+        self._has_res = has_residual
+        self.stage_codec = stage_codec
+        self._los = np.asarray([h.lo for h in fleet.workers], np.int64)
+        self.round_payload_bytes = 0     # gather+residual+scatter legs
+        self.aux_payload_bytes = 0       # snapshot / meta / init traffic
+        self.rpc_calls = 0
+
+    @property
+    def num_users(self) -> int:
+        return self._num_users
+
+    @property
+    def has_residual(self) -> bool:
+        return self._has_res
+
+    @property
+    def socket_bytes(self) -> int:
+        """Whole-frame bytes both directions (payload + envelope)."""
+        return sum(h.client.socket_bytes for h in self.fleet.workers)
+
+    # -- routing -----------------------------------------------------------
+
+    def _route(self, idx: np.ndarray):
+        """Yield ``(handle, positions, shard_local_idx)`` per involved
+        worker, positions indexing into the original cohort order."""
+        idx = np.asarray(idx, np.int64)
+        owners = np.searchsorted(self._los, idx, side="right") - 1
+        for w in np.unique(owners):
+            pos = np.nonzero(owners == w)[0]
+            h = self.fleet.workers[int(w)]
+            yield h, pos, (idx[pos] - h.lo).astype(np.int32)
+
+    # -- UserStateBackend --------------------------------------------------
+
+    def gather_rows(self, idx):
+        idx = np.asarray(idx)
+        C = len(idx)
+        d = np.empty((C, self.nd), np.float32)
+        o = np.empty((C, self.no), np.float32)
+        last = np.empty((C,), np.int32)
+        measured = 0
+        for h, pos, lidx in self._route(idx):
+            ret = h.client.call("gather", idx=lidx.tobytes())
+            d[pos] = wire.unpack_rows(ret["d"])
+            o[pos] = wire.unpack_rows(ret["opt"])
+            last[pos] = np.frombuffer(ret["last"], np.int32)
+            measured += (lidx.nbytes + wire.payload_nbytes(ret["d"])
+                         + wire.payload_nbytes(ret["opt"])
+                         + len(ret["last"]))
+            self.rpc_calls += 1
+        priced = wire.priced_gather_nbytes(C, self.nd, self.no,
+                                           stage_codec=self.stage_codec)
+        assert measured == priced, (measured, priced)
+        self.round_payload_bytes += measured
+        return d, o, last
+
+    def gather_residual(self, idx):
+        idx = np.asarray(idx)
+        res = np.empty((len(idx), self.nd), np.float32)
+        measured = 0
+        for h, pos, lidx in self._route(idx):
+            ret = h.client.call("gather_residual", idx=lidx.tobytes())
+            res[pos] = wire.unpack_rows(ret["res"])
+            measured += lidx.nbytes + wire.payload_nbytes(ret["res"])
+            self.rpc_calls += 1
+        priced = wire.priced_residual_nbytes(len(idx), self.nd)
+        assert measured == priced, (measured, priced)
+        self.round_payload_bytes += measured
+        return res
+
+    def scatter_rows(self, idx, d_rows, opt_rows, round_idx, *,
+                     residual=None) -> None:
+        idx = np.asarray(idx)
+        assert (residual is None) == (not self._has_res)
+        d_rows = np.asarray(d_rows)
+        opt_rows = np.asarray(opt_rows)
+        measured = 0
+        for h, pos, lidx in self._route(idx):
+            d_pay = wire.pack_rows(d_rows[pos], self.stage_codec)
+            o_pay = wire.pack_rows(opt_rows[pos], "none")
+            kw = {}
+            if residual is not None:
+                kw["res"] = wire.pack_rows(np.asarray(residual)[pos],
+                                           "none")
+                measured += wire.payload_nbytes(kw["res"])
+            h.client.call("scatter", idx=lidx.tobytes(), d=d_pay,
+                          opt=o_pay, round_idx=int(round_idx), **kw)
+            measured += (lidx.nbytes + wire.payload_nbytes(d_pay)
+                         + wire.payload_nbytes(o_pay))
+            self.rpc_calls += 1
+        priced = wire.priced_scatter_nbytes(
+            len(idx), self.nd, self.no, stage_codec=self.stage_codec,
+            has_residual=self._has_res)
+        assert measured == priced, (measured, priced)
+        self.round_payload_bytes += measured
+
+    @property
+    def last_round(self) -> np.ndarray:
+        """Full (U,) last-trained-round vector (one gather_meta RPC per
+        worker) — the driver reads it once per run() for staleness."""
+        out = np.empty((self._num_users,), np.int32)
+        for h in self.fleet.workers:
+            ret = h.client.call("gather_meta")
+            out[h.lo:h.hi] = np.frombuffer(ret["last"], np.int32)
+            self.aux_payload_bytes += len(ret["last"])
+            self.rpc_calls += 1
+        return out
+
+    def snapshot(self) -> CohortStore:
+        """Full-store gather at EXACT f32 (codec override: a snapshot
+        must reproduce the stored rows bit-for-bit regardless of the
+        round-path stage codec), chunked per worker."""
+        d = np.empty((self._num_users, self.nd), np.float32)
+        o = np.empty((self._num_users, self.no), np.float32)
+        last = np.empty((self._num_users,), np.int32)
+        res = (np.empty((self._num_users, self.nd), np.float32)
+               if self._has_res else None)
+        for h in self.fleet.workers:
+            for a in range(0, h.hi - h.lo, _PUSH_CHUNK):
+                b = min(a + _PUSH_CHUNK, h.hi - h.lo)
+                lidx = np.arange(a, b, dtype=np.int32)
+                ret = h.client.call("gather", idx=lidx.tobytes(),
+                                    codec="none")
+                d[h.lo + a:h.lo + b] = wire.unpack_rows(ret["d"])
+                o[h.lo + a:h.lo + b] = wire.unpack_rows(ret["opt"])
+                last[h.lo + a:h.lo + b] = np.frombuffer(ret["last"],
+                                                        np.int32)
+                if res is not None:
+                    rr = h.client.call("gather_residual",
+                                       idx=lidx.tobytes())
+                    res[h.lo + a:h.lo + b] = wire.unpack_rows(rr["res"])
+                    self.rpc_calls += 1
+                self.rpc_calls += 1
+                self.aux_payload_bytes += lidx.nbytes
+        return CohortStore(jnp.array(d), jnp.array(o), jnp.array(last),
+                           None if res is None else jnp.array(res))
+
+    # -- init --------------------------------------------------------------
+
+    def push_store(self, host_backend) -> None:
+        """Seed the fleet from an in-process ``HostStateBackend`` (the
+        bit-exact ``init_host_backend`` values), chunked, exact f32."""
+        for h in self.fleet.workers:
+            for a in range(h.lo, h.hi, _PUSH_CHUNK):
+                b = min(a + _PUSH_CHUNK, h.hi)
+                kw = {}
+                if self._has_res:
+                    kw["res"] = wire.pack_rows(host_backend.residual[a:b],
+                                               "none")
+                h.client.call(
+                    "push_rows", off=a - h.lo,
+                    d=wire.pack_rows(host_backend.d_flat[a:b], "none"),
+                    opt=wire.pack_rows(host_backend.opt_flat[a:b], "none"),
+                    last=host_backend.last_round[a:b].tobytes(), **kw)
+                self.rpc_calls += 1
+
+
+class MultihostStreamDriver(HostStreamDriver):
+    """The ``multihost`` registered backend: the HostStreamDriver round
+    loop (gather -> rows engine on the coordinator's device -> scatter)
+    with the store behind :class:`MultihostStateBackend` RPCs.  Init
+    runs ``init_host_backend`` in-process (bit-exact vs the host
+    backend) and pushes each worker its shard; checkpointing is sharded
+    (``save_aux``/``load_aux``) — each worker writes/reads its own shard
+    file and a different worker count re-partitions on restore.
+    Store-resident window fusion stays host-only (the store is remote);
+    ``extra["fused_store"]`` reports False."""
+
+    backend_name = "multihost"
+
+    def __init__(self, sess, defer_state: bool = False):
+        from repro.core.approaches import d_flat_layout, d_opt_flat_layout
+        sp, fcfg = sess.spec, sess.fcfg
+        nd = d_flat_layout(sess.pair).n
+        no = d_opt_flat_layout(sess.pair, fcfg).n
+        has_res = _wants_residual(fcfg)
+        stage_codec = ("int8" if sp.combine.compression.stage_rows
+                       else "none")
+        self._fleet = launch_local_workers(
+            fcfg.num_users, sp.backend.workers,
+            timeout_s=sp.backend.rpc_timeout_s,
+            retries=sp.backend.rpc_retries,
+            manifest_extra={"spec": sp.to_dict()})
+        try:
+            for h in self._fleet.workers:
+                h.client.call("config", nd=nd, no=no,
+                              has_residual=has_res,
+                              stage_codec=stage_codec)
+            super().__init__(sess, defer_state=defer_state)
+            mh = MultihostStateBackend(
+                self._fleet, fcfg.num_users, nd, no,
+                has_residual=has_res, stage_codec=stage_codec)
+            if not defer_state:
+                mh.push_store(self.backend)   # the local init store ...
+            self.backend = mh                 # ... is dropped here
+        except BaseException:
+            self._fleet.shutdown()
+            raise
+
+    # -- checkpoint state: shared carry only; rows live on the workers -----
+
+    def _shape_template(self):
+        return {"shared": super()._shape_template()["shared"]}
+
+    def arrays(self):
+        if self.shared is None:
+            return self._template
+        return {"shared": _pack_key(self.shared)}
+
+    def load_arrays(self, tree) -> None:
+        self.shared = _unpack_key(jax.tree.map(jnp.asarray,
+                                               tree["shared"]))
+
+    def save_aux(self, path: str, step: int) -> None:
+        d = os.path.join(path, f"shards_{step:08d}")
+        os.makedirs(d, exist_ok=True)
+        files = [h.client.call("save_shard", dir=d)
+                 for h in self._fleet.workers]
+        manifest = {"format": 1, "step": step,
+                    "num_users": self.sess.fcfg.num_users,
+                    "workers": len(self._fleet.workers),
+                    "partitions": self._fleet.manifest["partitions"],
+                    "files": files}
+        tmp = os.path.join(d, _SHARDS_MANIFEST + ".tmp")
+        with open(tmp, "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+        os.replace(tmp, os.path.join(d, _SHARDS_MANIFEST))
+
+    def load_aux(self, path: str, step: int) -> None:
+        d = os.path.join(path, f"shards_{step:08d}")
+        with open(os.path.join(d, _SHARDS_MANIFEST)) as f:
+            manifest = json.load(f)
+        if manifest["num_users"] != self.sess.fcfg.num_users:
+            raise ValueError(
+                f"sharded checkpoint covers {manifest['num_users']} "
+                f"users, session has {self.sess.fcfg.num_users}")
+        for h in self._fleet.workers:
+            h.client.call("restore_shard", dir=d,
+                          files=manifest["files"])
+
+    def close(self) -> None:
+        self._fleet.shutdown()
+
+
+register_backend("multihost", MultihostStreamDriver, streams=True)
+
+
+# ---------------------------------------------------------------------------
+# Trace specimens (the PR 9 contract checker's enumeration hook)
+# ---------------------------------------------------------------------------
+
+def multihost_trace_specimens(pair, fcfg, *, cohort: int = 2):
+    """Specimens for the multihost backend's compiled programs.
+
+    * ``approach1/multihost_rows[_ef]`` — the registered backend's round
+      engine (``make_cohort_rows_engine``, same factory the driver
+      resolves) with the RPC-staged row buffers in the donated
+      positions: TRC001 proves the gathered cross-host rows are updated
+      IN PLACE through the engine, never silently copied.
+    * ``multihost/stage_pack`` / ``multihost/stage_unpack`` — the int8
+      wire transport programs.  These narrow/widen dtypes (f32 -> int8 +
+      scale and back), so NO buffer can legally alias; the contract is
+      the inverse one — the checker asserts the lowered modules claim no
+      donation (a claimed-but-unhonorable donation is exactly the
+      silent-copy regression), plus the callback/f64 census.
+    """
+    from repro.core.approaches import d_flat_layout, d_opt_flat_layout
+    from repro.core.engine import (CohortShared, init_state,
+                                   make_cohort_rows_engine)
+    from repro.kernels import ops as kops
+
+    C = cohort
+    dl = d_flat_layout(pair)
+    ol = d_opt_flat_layout(pair, fcfg)
+    ef = _wants_residual(fcfg)
+    state = init_state(pair, fcfg, jax.random.key(0))
+    shared = CohortShared(state.g, state.g_opt, state.server_d,
+                          state.step, state.key)
+    shape = np.asarray(pair.g_apply(
+        state.g, pair.sample_z(jax.random.key(1), 1))).shape[1:]
+    d_rows = np.zeros((C, dl.n), np.float32)
+    o_rows = np.zeros((C, ol.n), np.float32)
+    ages = np.zeros((C,), np.int32)
+    reals = np.zeros((C, 4) + tuple(shape), np.float32)
+    from repro.core.engine import TraceSpecimen
+    eng = make_cohort_rows_engine(pair, fcfg, "approach1")
+    if ef:
+        res = np.zeros((C, dl.n), np.float32)
+        yield TraceSpecimen(
+            "approach1/multihost_rows_ef", eng,
+            (shared, d_rows, o_rows, res, ages, None, reals),
+            donate=(1, 2, 3), min_barriers=3, expect_scan=False)
+    else:
+        yield TraceSpecimen(
+            "approach1/multihost_rows", eng,
+            (shared, d_rows, o_rows, ages, None, reals),
+            donate=(1, 2), min_barriers=3, expect_scan=False)
+        rows = np.zeros((C, dl.n), np.float32)
+        q = np.zeros((C, dl.n), np.int8)
+        scale = np.zeros((C,), np.float32)
+        yield TraceSpecimen(
+            "multihost/stage_pack",
+            jax.jit(lambda x: kops.quantize_rows(x)),
+            (rows,), donate=(), min_barriers=0, expect_scan=False)
+        yield TraceSpecimen(
+            "multihost/stage_unpack",
+            jax.jit(lambda a, s: kops.dequantize_rows(a, s)),
+            (q, scale), donate=(), min_barriers=0, expect_scan=False)

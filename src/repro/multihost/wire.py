@@ -1,0 +1,142 @@
+"""Packed row payloads for the coordinator<->worker wire.
+
+jax-free on purpose: workers import this module (plus numpy/msgpack)
+and nothing else from the heavy stack, so a worker process is serving
+RPCs long before a coordinator-side jax import would finish.  The
+pricing helpers lazily import ``upload_bytes_flat`` — only the
+coordinator (which already runs jax) calls them.
+
+A payload is a msgpack-ready dict — raw row-major buffers plus shape,
+one dict per row leg:
+
+    {"codec": "none", "shape": [r, n], "data": <r*n*4 bytes f32>}
+    {"codec": "int8", "shape": [r, n], "q": <r*n bytes int8>,
+                                       "scale": <r*4 bytes f32>}
+
+The int8 codec is the SAME per-row absmax transform as
+``core.session._np_quantize_rows`` / ``kernels.ref.quantize_rows_ref``
+(deterministic path) — and it is IDEMPOTENT: a row's absmax element
+quantizes to exactly +-127, so re-quantizing a dequantized payload
+reproduces ``(q, scale)`` bit-for-bit.  That idempotence is what lets
+``MultihostStateBackend`` hand exact f32 rows to the unchanged
+streaming driver while the wire carries int8+scale: the driver's own
+``stage_rows`` quantization re-derives the identical payload, and a
+2-worker trajectory pins bitwise against the single-process host
+backend (tests/test_multihost.py).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+WIRE_CODECS = ("none", "int8")
+
+
+def np_quantize_rows(x: np.ndarray):
+    """Per-row absmax int8 — numpy mirror of
+    ``core.session._np_quantize_rows`` (kept in sync by
+    tests/test_multihost.py; duplicated here so workers never import
+    jax)."""
+    x = np.asarray(x, np.float32)
+    scale = (np.abs(x).max(axis=1) / np.float32(127.0)).astype(np.float32)
+    inv = np.where(scale > 0, np.float32(1.0) / scale,
+                   np.float32(0.0)).astype(np.float32)
+    q = np.clip(np.rint(x * inv[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def np_dequantize_rows(q: np.ndarray, scale: np.ndarray) -> np.ndarray:
+    return q.astype(np.float32) * scale[:, None].astype(np.float32)
+
+
+def pack_rows(rows: np.ndarray, codec: str = "none") -> dict:
+    """(r, n) f32 rows -> one wire payload dict."""
+    rows = np.ascontiguousarray(rows, np.float32)
+    assert rows.ndim == 2, rows.shape
+    if codec == "none":
+        return {"codec": "none", "shape": list(rows.shape),
+                "data": rows.tobytes()}
+    if codec == "int8":
+        q, scale = np_quantize_rows(rows)
+        return {"codec": "int8", "shape": list(rows.shape),
+                "q": q.tobytes(), "scale": scale.tobytes()}
+    raise ValueError(f"unknown wire codec {codec!r}; one of {WIRE_CODECS}")
+
+
+def unpack_rows(payload: dict) -> np.ndarray:
+    """Wire payload dict -> (r, n) f32 rows (dequantized for int8)."""
+    r, n = payload["shape"]
+    if payload["codec"] == "none":
+        return np.frombuffer(payload["data"], np.float32).reshape(r, n)
+    if payload["codec"] == "int8":
+        q = np.frombuffer(payload["q"], np.int8).reshape(r, n)
+        scale = np.frombuffer(payload["scale"], np.float32)
+        return np_dequantize_rows(q, scale)
+    raise ValueError(f"unknown wire codec {payload['codec']!r}")
+
+
+def payload_nbytes(payload: dict) -> int:
+    """Raw row-buffer bytes in one payload — the priced quantity (the
+    msgpack envelope/key overhead is accounted separately as socket
+    bytes by the RPC client)."""
+    if payload["codec"] == "none":
+        return len(payload["data"])
+    return len(payload["q"]) + len(payload["scale"])
+
+
+# ---------------------------------------------------------------------------
+# Pricing: composed from the ONE table (core.federated.upload_bytes_flat)
+# ---------------------------------------------------------------------------
+
+def priced_rows_nbytes(rows: int, n: int, codec: str = "none") -> int:
+    """Priced bytes for ``rows`` dense state rows of flat width ``n``
+    under a wire codec — ``upload_bytes_flat(n, "none", codec=...)`` per
+    row (dense policy: state rows ship whole; selection policies apply
+    to the in-graph DELTA upload, not the store transport)."""
+    from repro.core.federated import upload_bytes_flat
+    return rows * upload_bytes_flat(n, "none", codec=codec)
+
+
+def priced_gather_nbytes(rows: int, nd: int, no: int, *,
+                         stage_codec: str = "none") -> int:
+    """Priced payload bytes of one gather call touching ``rows`` rows:
+    int32 idx up + (D rows under the stage codec, opt rows exact f32,
+    int32 last_round) down."""
+    return (rows * 4                                     # idx (int32)
+            + priced_rows_nbytes(rows, nd, stage_codec)  # D rows
+            + priced_rows_nbytes(rows, no, "none")       # opt rows (exact)
+            + rows * 4)                                  # last_round (int32)
+
+
+def priced_scatter_nbytes(rows: int, nd: int, no: int, *,
+                          stage_codec: str = "none",
+                          has_residual: bool = False) -> int:
+    """Priced payload bytes of one scatter call touching ``rows`` rows:
+    int32 idx + D rows under the stage codec + exact f32 opt rows
+    (+ exact f32 residual rows — the EF ledger is never quantized)."""
+    return (rows * 4
+            + priced_rows_nbytes(rows, nd, stage_codec)
+            + priced_rows_nbytes(rows, no, "none")
+            + (priced_rows_nbytes(rows, nd, "none") if has_residual else 0))
+
+
+def priced_residual_nbytes(rows: int, nd: int) -> int:
+    """Priced payload bytes of one gather_residual call: int32 idx up +
+    exact f32 residual rows down."""
+    return rows * 4 + priced_rows_nbytes(rows, nd, "none")
+
+
+def priced_round_nbytes(cohort: int, nd: int, no: int, *,
+                        stage_codec: str = "none",
+                        has_residual: bool = False) -> int:
+    """Priced payload bytes one synchronous round moves over the
+    coordinator<->worker wire: a gather, a residual gather when the EF
+    ledger exists, and a scatter — independent of how many workers the
+    cohort's rows are split across (routing splits rows, never
+    duplicates them)."""
+    total = priced_gather_nbytes(cohort, nd, no, stage_codec=stage_codec)
+    if has_residual:
+        total += priced_residual_nbytes(cohort, nd)
+    total += priced_scatter_nbytes(cohort, nd, no, stage_codec=stage_codec,
+                                   has_residual=has_residual)
+    return total

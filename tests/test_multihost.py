@@ -1,0 +1,371 @@
+"""Multi-process federation control plane (the PR 10 tentpole).
+
+Contract ladder:
+
+* RPC failure paths are NAMED and bounded — a torn (truncated) frame is
+  rejected whole (never half-decoded), a dropped call succeeds on the
+  bounded retry, and a worker killed mid-run raises ``WorkerDied``
+  within the configured timeout budget instead of hanging.
+* A 2-worker multihost session pins BITWISE against the single-process
+  ``host`` backend on the same spec/seed — with ``stage_rows`` off the
+  rows cross the wire as exact f32; with it on they cross as int8 +
+  per-row scale and the idempotence of per-row absmax quantization
+  (the absmax element maps to exactly +-127, so requantizing a
+  dequantized payload reproduces (q, scale) bit-for-bit) keeps the
+  device-side inputs identical.
+* A checkpoint saved at W workers restores at any other worker count
+  (shard files are re-sliced by row range) and continues the host
+  trajectory bitwise.
+* Measured wire payload bytes equal the ``upload_bytes_flat``-composed
+  pricing exactly, per call and per round.
+"""
+
+import socket
+import struct
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.approaches import (DistGANConfig, d_flat_layout,
+                                   d_opt_flat_layout)
+from repro.core.gan import MLPGanConfig, make_mlp_pair
+from repro.core.session import FederationSession, _np_quantize_rows
+from repro.core.spec import (BackendSpec, CombineSpec, CompressionSpec,
+                             FederationSpec, ParticipationSpec)
+from repro.data.federated import FederatedDataset
+from repro.data.mixtures import make_user_domains
+from repro.multihost import wire
+from repro.multihost.launch import launch_local_workers, partition_users
+from repro.multihost.rpc import (RpcClient, RpcError, RpcTimeout,
+                                 TornFrame, WorkerDied, recv_frame,
+                                 send_frame)
+
+PAIR = make_mlp_pair(MLPGanConfig(data_dim=2, z_dim=8, g_hidden=16,
+                                  d_hidden=16))
+U, C = 16, 4
+
+
+def _ds(num_users=U):
+    users, union = make_user_domains(num_users, 2, 1.0)
+    return FederatedDataset([u.sample for u in users], union.sample,
+                            {"shard_sizes": [100] * num_users})
+
+
+def _fcfg(num_users=U):
+    return DistGANConfig(num_users=num_users, selection="topk",
+                         upload_frac=0.5)
+
+
+def _spec(kind, *, compressed=False, **backend_kw):
+    comb = CombineSpec()
+    if compressed:
+        comb = CombineSpec(compression=CompressionSpec(
+            codec="topk_int8", error_feedback=True, stage_rows=True))
+    return FederationSpec(
+        approach="approach1", batch_size=16, seed=3, eval_samples=0,
+        participation=ParticipationSpec(scheduler="uniform",
+                                        cohort_size=C),
+        backend=BackendSpec(kind=kind, **backend_kw), combine=comb)
+
+
+# ---------------------------------------------------------------------------
+# frame codec + failure paths
+# ---------------------------------------------------------------------------
+
+def test_torn_frame_payload_rejected():
+    """A payload truncated short of its declared length must raise
+    TornFrame — never decode the partial bytes."""
+    a, b = socket.socketpair()
+    b.sendall(struct.pack(">I", 100) + b"only-a-few-bytes")
+    b.close()
+    with pytest.raises(TornFrame, match="truncated"):
+        recv_frame(a)
+    a.close()
+
+
+def test_torn_frame_header_rejected():
+    a, b = socket.socketpair()
+    b.sendall(b"\x00\x00")          # 2 of 4 header bytes
+    b.close()
+    with pytest.raises(TornFrame, match="header truncated"):
+        recv_frame(a)
+    a.close()
+
+
+def test_clean_close_is_worker_died_not_torn():
+    a, b = socket.socketpair()
+    b.close()
+    with pytest.raises(WorkerDied):
+        recv_frame(a)
+    a.close()
+
+
+def test_oversized_frame_rejected():
+    a, b = socket.socketpair()
+    b.sendall(struct.pack(">I", (1 << 30) + 1))
+    with pytest.raises(TornFrame, match="cap"):
+        recv_frame(a)
+    a.close()
+    b.close()
+
+
+def test_retry_succeeds_after_one_dropped_call():
+    """First connection is dropped mid-call (request read, no reply);
+    the client's bounded retry reconnects and the second attempt
+    serves."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+    attempts = []
+
+    def server():
+        # attempt 1: read the request, close without replying
+        conn, _ = srv.accept()
+        recv_frame(conn)
+        attempts.append("dropped")
+        conn.close()
+        # attempt 2: serve properly
+        conn, _ = srv.accept()
+        req, _ = recv_frame(conn)
+        attempts.append("served")
+        send_frame(conn, {"ret": {"echo": req["x"]}})
+        conn.close()
+
+    t = threading.Thread(target=server, daemon=True)
+    t.start()
+    client = RpcClient("127.0.0.1", port, timeout_s=5.0, retries=2)
+    ret = client.call("echo", x=41)
+    assert ret == {"echo": 41}
+    assert attempts == ["dropped", "served"]
+    client.close()
+    srv.close()
+
+
+def test_retries_exhausted_raises_named_error():
+    """A server that always drops exhausts the retry budget and raises
+    WorkerDied (not a hang, not a bare OSError)."""
+    srv = socket.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+    stop = threading.Event()
+
+    def server():
+        while not stop.is_set():
+            try:
+                srv.settimeout(0.2)
+                conn, _ = srv.accept()
+            except (TimeoutError, OSError):
+                continue
+            try:
+                recv_frame(conn)
+            except RpcError:
+                pass
+            conn.close()
+
+    t = threading.Thread(target=server, daemon=True)
+    t.start()
+    client = RpcClient("127.0.0.1", port, timeout_s=5.0, retries=1)
+    with pytest.raises(WorkerDied, match="2 attempt"):
+        client.call("echo", x=1)
+    stop.set()
+    t.join(timeout=2.0)
+    client.close()
+    srv.close()
+
+
+def test_worker_killed_mid_run_raises_within_timeout():
+    """SIGKILL a live worker, then gather: the named error must surface
+    within the (retries + 1) * timeout budget, not hang."""
+    timeout_s, retries = 2.0, 1
+    fleet = launch_local_workers(8, 1, timeout_s=timeout_s,
+                                 retries=retries)
+    try:
+        h = fleet.workers[0]
+        h.client.call("config", nd=4, no=4, has_residual=False)
+        h.proc.kill()
+        h.proc.wait()
+        t0 = time.monotonic()
+        with pytest.raises((WorkerDied, RpcTimeout), match="worker0"):
+            h.client.call("gather",
+                          idx=np.arange(2, dtype=np.int32).tobytes())
+        assert time.monotonic() - t0 < (retries + 1) * timeout_s + 2.0
+    finally:
+        fleet.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# partitioning + wire codec
+# ---------------------------------------------------------------------------
+
+def test_partition_users_contiguous_and_balanced():
+    for users, workers in [(10, 3), (16, 2), (7, 7), (4096, 5)]:
+        parts = partition_users(users, workers)
+        assert parts[0][0] == 0 and parts[-1][1] == users
+        sizes = [hi - lo for lo, hi in parts]
+        assert max(sizes) - min(sizes) <= 1
+        for (_, a), (b, _) in zip(parts, parts[1:]):
+            assert a == b
+    with pytest.raises(ValueError):
+        partition_users(2, 3)
+    with pytest.raises(ValueError):
+        partition_users(8, 0)
+
+
+def test_wire_quantizer_matches_session_and_is_idempotent():
+    """wire.np_quantize_rows must stay the session staging transform's
+    bit-exact mirror, and requantizing a dequantized payload must be a
+    fixed point — the property the multihost bitwise pin rests on."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(8, 33)).astype(np.float32)
+    x[2] = 0.0                                    # all-zero row edge
+    q1, s1 = wire.np_quantize_rows(x)
+    q2, s2 = _np_quantize_rows(x)
+    np.testing.assert_array_equal(q1, q2)
+    np.testing.assert_array_equal(s1, s2)
+    deq = wire.np_dequantize_rows(q1, s1)
+    q3, s3 = wire.np_quantize_rows(deq)
+    np.testing.assert_array_equal(q1, q3)
+    np.testing.assert_array_equal(s1, s3)
+
+
+def test_pack_rows_roundtrip_and_nbytes():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(5, 12)).astype(np.float32)
+    p = wire.pack_rows(x, "none")
+    np.testing.assert_array_equal(wire.unpack_rows(p), x)
+    assert wire.payload_nbytes(p) == 5 * 12 * 4
+    assert wire.payload_nbytes(p) == wire.priced_rows_nbytes(5, 12, "none")
+    p8 = wire.pack_rows(x, "int8")
+    assert wire.payload_nbytes(p8) == 5 * (12 + 4)
+    assert wire.payload_nbytes(p8) == wire.priced_rows_nbytes(5, 12,
+                                                              "int8")
+    q, s = wire.np_quantize_rows(x)
+    np.testing.assert_array_equal(wire.unpack_rows(p8),
+                                  wire.np_dequantize_rows(q, s))
+
+
+# ---------------------------------------------------------------------------
+# trajectory pins vs the single-process host backend
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("compressed", [False, True],
+                         ids=["f32_wire", "int8_wire"])
+def test_multihost_matches_host_backend(compressed):
+    """2 workers, same spec/seed: losses, generator eval, and the full
+    store (D/opt/last/residual) must equal the host backend bitwise."""
+    rh = FederationSession(PAIR, _fcfg(), _ds(),
+                           _spec("host", compressed=compressed)).run(6)
+    sess = FederationSession(PAIR, _fcfg(), _ds(),
+                             _spec("multihost", compressed=compressed,
+                                   workers=2))
+    try:
+        rm = sess.run(6)
+        np.testing.assert_array_equal(rh.g_losses, rm.g_losses)
+        np.testing.assert_array_equal(rh.d_losses, rm.d_losses)
+        hb = rh.extra["host_backend"]
+        snap = rm.extra["host_backend"].snapshot()
+        np.testing.assert_array_equal(hb.d_flat, np.asarray(snap.d_flat))
+        np.testing.assert_array_equal(hb.opt_flat,
+                                      np.asarray(snap.opt_flat))
+        np.testing.assert_array_equal(hb.last_round,
+                                      np.asarray(snap.last_round))
+        if compressed:
+            np.testing.assert_array_equal(hb.residual,
+                                          np.asarray(snap.residual))
+    finally:
+        sess.close()
+
+
+def test_save_restore_across_worker_count_change(tmp_path):
+    """Save at W=2, restore at W=3 and W=1: both continuations must
+    reproduce the uninterrupted host-backend trajectory bitwise."""
+    path = str(tmp_path / "ckpt")
+    sess = FederationSession(PAIR, _fcfg(), _ds(),
+                             _spec("multihost", compressed=True,
+                                   workers=2))
+    try:
+        sess.run(3)
+        sess.save(path)
+    finally:
+        sess.close()
+
+    ref = FederationSession(PAIR, _fcfg(), _ds(),
+                            _spec("host", compressed=True))
+    ref.run(3)
+    r_ref = ref.run(3)
+
+    for w in (3, 1):
+        restored = FederationSession.restore(path, PAIR, _fcfg(), _ds(),
+                                             workers=w)
+        try:
+            r = restored.run(3)
+            np.testing.assert_array_equal(r_ref.g_losses, r.g_losses)
+            snap = r.extra["host_backend"].snapshot()
+            np.testing.assert_array_equal(
+                ref._driver.backend.d_flat, np.asarray(snap.d_flat))
+            np.testing.assert_array_equal(
+                ref._driver.backend.residual, np.asarray(snap.residual))
+        finally:
+            restored.close()
+
+
+def test_restore_workers_override_rejected_for_host(tmp_path):
+    path = str(tmp_path / "ckpt")
+    sess = FederationSession(PAIR, _fcfg(), _ds(), _spec("host"))
+    sess.run(2)
+    sess.save(path)
+    with pytest.raises(ValueError, match="multihost"):
+        FederationSession.restore(path, PAIR, _fcfg(), _ds(), workers=2)
+
+
+# ---------------------------------------------------------------------------
+# wire accounting: measured == priced
+# ---------------------------------------------------------------------------
+
+def test_wire_bytes_match_pricing():
+    """Every gather/scatter hard-asserts measured == priced internally;
+    this re-derives the per-round total independently and checks the
+    accumulated counter (both wire codecs)."""
+    nd = d_flat_layout(PAIR).n
+    no = d_opt_flat_layout(PAIR, _fcfg()).n
+    for compressed, codec, res in [(False, "none", False),
+                                   (True, "int8", True)]:
+        sess = FederationSession(PAIR, _fcfg(), _ds(),
+                                 _spec("multihost", compressed=compressed,
+                                       workers=2))
+        try:
+            r = sess.run(5)
+            mb = r.extra["host_backend"]
+            priced = 5 * wire.priced_round_nbytes(
+                C, nd, no, stage_codec=codec, has_residual=res)
+            assert mb.round_payload_bytes == priced
+            # envelope overhead exists but is bounded: whole-socket bytes
+            # strictly exceed payload bytes (frames, msgpack keys, init
+            # push, meta) — and the payload is the dominant share
+            assert mb.socket_bytes > mb.round_payload_bytes
+        finally:
+            sess.close()
+
+
+# ---------------------------------------------------------------------------
+# spec validation
+# ---------------------------------------------------------------------------
+
+def test_backend_spec_worker_field_validation():
+    with pytest.raises(ValueError, match="workers"):
+        BackendSpec(kind="multihost")
+    with pytest.raises(ValueError, match="workers"):
+        BackendSpec(kind="multihost", workers=0)
+    with pytest.raises(ValueError, match="one process"):
+        BackendSpec(kind="host", workers=2)
+    with pytest.raises(ValueError, match="rpc_timeout_s"):
+        BackendSpec(kind="multihost", workers=2, rpc_timeout_s=0)
+    with pytest.raises(ValueError, match="rpc_retries"):
+        BackendSpec(kind="multihost", workers=2, rpc_retries=-1)
+    with pytest.raises(ValueError, match="empty shard"):
+        _spec("multihost", workers=U + 1).validate_against(U)
+    # round-trips through the manifest
+    sp = _spec("multihost", workers=2, rpc_timeout_s=5.0, rpc_retries=1)
+    sp2 = FederationSpec.from_dict(sp.to_dict())
+    assert sp2.backend.workers == 2
+    assert sp2.backend.rpc_retries == 1
